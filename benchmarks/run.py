@@ -1,0 +1,38 @@
+"""Benchmark harness — one section per paper figure/claim.
+
+  fig_run_*        — the canonical 3-client/2-replica run (paper Figs
+                     1/2/3/4/7) per causality mechanism
+  scale_*          — metadata growth along clients/replicas/updates
+                     (the §6/§7 scalability claim)
+  dvv_leq_* etc.   — kernel-layer throughput (TPU-adaptation layer)
+
+Prints ``name,us_per_call,derived`` CSV.  Exits non-zero if any mechanism
+deviates from the paper's qualitative outcome.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import kernel_bench, paper_figures, scalability
+
+    rows = []
+    rows += paper_figures.rows()
+    rows += scalability.rows()
+    rows += kernel_bench.rows()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+    failures = paper_figures.check_paper_claims()
+    if failures:
+        print("\nPAPER-CLAIM FAILURES:", file=sys.stderr)
+        for f in failures:
+            print("  " + f, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

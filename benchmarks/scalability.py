@@ -1,0 +1,62 @@
+"""The paper's central scalability claim (§6/§7): DVV metadata is
+O(#replica-nodes); per-client vectors are O(#clients); causal histories
+are O(#updates).  Same seeded workload, swept along each axis.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from .workload import WorkloadConfig, run_workload
+
+MECHS = ("dvv", "vv_client", "oracle", "vv_server")
+
+
+def sweep_clients() -> List[str]:
+    rows = []
+    for n_clients in (5, 20, 80):
+        for mech in MECHS:
+            cfg = WorkloadConfig(n_replicas=3, n_clients=n_clients,
+                                 n_keys=1, n_ops=60 + 4 * n_clients, seed=42)
+            t0 = time.perf_counter()
+            res = run_workload(mech, cfg)
+            us = (time.perf_counter() - t0) * 1e6 / cfg.n_ops
+            rows.append(
+                f"scale_clients_{mech}_c{n_clients},{us:.1f},"
+                f"metaInts={res.metadata_ints_max};lost={res.lost_updates};"
+                f"falseDom={res.false_dominance}")
+    return rows
+
+
+def sweep_replicas() -> List[str]:
+    rows = []
+    for n_replicas in (2, 4, 8):
+        for mech in MECHS:
+            cfg = WorkloadConfig(n_replicas=n_replicas, n_clients=20,
+                                 n_keys=1, n_ops=150, seed=43)
+            t0 = time.perf_counter()
+            res = run_workload(mech, cfg)
+            us = (time.perf_counter() - t0) * 1e6 / cfg.n_ops
+            rows.append(
+                f"scale_replicas_{mech}_r{n_replicas},{us:.1f},"
+                f"metaInts={res.metadata_ints_max};lost={res.lost_updates}")
+    return rows
+
+
+def sweep_updates() -> List[str]:
+    rows = []
+    for n_ops in (100, 400, 1600):
+        for mech in ("dvv", "oracle"):
+            cfg = WorkloadConfig(n_replicas=3, n_clients=10, n_keys=1,
+                                 n_ops=n_ops, seed=44)
+            t0 = time.perf_counter()
+            res = run_workload(mech, cfg)
+            us = (time.perf_counter() - t0) * 1e6 / n_ops
+            rows.append(
+                f"scale_updates_{mech}_n{n_ops},{us:.1f},"
+                f"metaInts={res.metadata_ints_max}")
+    return rows
+
+
+def rows() -> List[str]:
+    return sweep_clients() + sweep_replicas() + sweep_updates()

@@ -1,0 +1,62 @@
+"""Paper walkthrough: the Figure 7 run, step by step, under DVV — and the
+same run under the baselines, showing exactly what each one gets wrong.
+
+Run:  PYTHONPATH=src python examples/kvstore_demo.py
+"""
+from repro.core import ALL_MECHANISMS
+from repro.store import KVCluster, SimNetwork
+
+
+def run(mech_name: str, verbose: bool = False):
+    c = KVCluster(("a", "b"), ALL_MECHANISMS[mech_name],
+                  network=SimNetwork(seed=0))
+
+    def show(step):
+        if verbose:
+            sa = c.nodes["a"].versions("k")
+            sb = c.nodes["b"].versions("k")
+            print(f"  {step}")
+            print(f"    Ra: {sorted(map(repr, sa))}")
+            print(f"    Rb: {sorted(map(repr, sb))}")
+
+    c.put("k", "v", coordinator="b", client_id="C1", client_counter=1,
+          wall_time=1.0)
+    show("C1 PUT v @ Rb (empty context)")
+    c.put("k", "w", coordinator="b", client_id="C2", client_counter=1,
+          wall_time=2.0)
+    show("C2 PUT w @ Rb (empty context)  <- concurrent, same coordinator")
+    c.put("k", "x", coordinator="a", client_id="C3", client_counter=1,
+          wall_time=3.0)
+    show("C3 PUT x @ Ra (empty context)")
+    ctx = c.get("k", via="a").context
+    c.put("k", "y", context=ctx, coordinator="a", client_id="C3",
+          client_counter=2, wall_time=4.0)
+    show("C3 PUT y @ Ra (context = x)    <- session overwrite")
+    c.antientropy("b", "a")
+    show("anti-entropy Rb -> Ra")
+    ctx_b = c.get("k", via="b").context
+    c.put("k", "z", context=ctx_b, coordinator="a", client_id="C2",
+          client_counter=2, wall_time=5.0)
+    show("C2 PUT z @ Ra (context = {v,w} from Rb)")
+
+    final = c.get("k", via="a")
+    return final.values
+
+
+print("=== Figure 7 run under each mechanism ===\n")
+print("expected final state at Ra: {y, z} (z subsumes v,w; y ∥ z)\n")
+for mech in ("dvv", "oracle", "vv_server", "vv_client", "lamport",
+             "wallclock_lww"):
+    values = run(mech, verbose=(mech == "dvv"))
+    verdict = "CORRECT" if set(values) == {"y", "z"} else "WRONG (lost update)"
+    print(f"{mech:18s} -> {values}   {verdict}")
+
+print("""
+Why the baselines fail (paper §3):
+  vv_server      : w's clock {(b,2)} falsely dominates v's {(b,1)}; later
+                   z's {(a,3),(b,2)} falsely dominates y's {(a,2)}.
+  lamport / LWW  : total order — every concurrent write but the "last" is
+                   silently discarded.
+DVV's clock for z is {(a,0,3),(b,2)}: the (b,2) component carries the
+causal context (v,w), the dot (a,0,3) is the new event — so z replaces
+v and w but stays concurrent with y.  Exactly the paper's Figure 7.""")

@@ -1,0 +1,110 @@
+"""Replicated serving with DVV-tracked session state.
+
+A small decoder serves batched generation requests.  Each session's cursor
+(position, last token) lives in the replicated DVV store so ANY serving
+node can continue a session — including after the node holding it dies
+mid-generation.  Concurrent continuations of one session (split-brain
+during a partition) surface as siblings and are resolved deterministically
+instead of silently double-generating — the paper's same-coordinator
+concurrency case, at the serving layer.
+
+Run:  PYTHONPATH=src python examples/serve_replicated.py
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import DVV_MECHANISM
+from repro.models import decode_step, init_cache, init_params
+from repro.store import KVCluster, SimNetwork
+
+
+def main():
+    cfg = get_config("gemma-2b").smoke()
+    params = init_params(jax.random.key(0), cfg)
+    B, MAXLEN = 4, 32
+    step = jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+
+    store = KVCluster(("srv1", "srv2"), DVV_MECHANISM,
+                      network=SimNetwork(seed=0))
+
+    def save_cursor(session, pos, toks, node):
+        res = store.get(f"session/{session}", via=node)
+        store.put(f"session/{session}",
+                  json.dumps({"pos": pos, "toks": toks}),
+                  context=res.context, via=node, client_id=node)
+
+    def load_cursor(session, node):
+        res = store.get(f"session/{session}", via=node)
+        if not res.values:
+            return None
+        cursors = [json.loads(v) for v in res.values]
+        if len(cursors) > 1:
+            print(f"  [{session}] {len(cursors)} concurrent cursors detected "
+                  f"-> resolving to max-pos (deterministic)")
+        chosen = max(cursors, key=lambda c: (c["pos"], json.dumps(c)))
+        store.put(f"session/{session}", json.dumps(chosen),
+                  context=res.context, via=node, client_id=node)
+        return chosen
+
+    # --- serve a batch of 4 sessions on srv1 --------------------------------
+    cache = init_cache(cfg, B, MAXLEN)
+    toks = jnp.zeros((B,), jnp.int32)
+    history = [[] for _ in range(B)]
+    print("srv1: decoding steps 0..9 for 4 sessions")
+    for pos in range(10):
+        logits, cache = step(params, cache, toks, jnp.asarray(pos, jnp.int32))
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(B):
+            history[i].append(int(toks[i]))
+    for i in range(B):
+        save_cursor(f"s{i}", 10, history[i], "srv1")
+    store.antientropy_round()
+
+    # --- srv1 dies; srv2 picks the sessions up ------------------------------
+    print("srv1 dies; srv2 restores sessions from the DVV store")
+    store.network.fail_node("srv1")
+    cursors = [load_cursor(f"s{i}", "srv2") for i in range(B)]
+    assert all(c is not None and c["pos"] == 10 for c in cursors)
+    # rebuild the KV cache by replaying the session tokens (prefill would be
+    # the production path; replay keeps the example short)
+    cache2 = init_cache(cfg, B, MAXLEN)
+    replay = jnp.zeros((B,), jnp.int32)
+    for pos in range(10):
+        _, cache2 = step(params, cache2, replay, jnp.asarray(pos, jnp.int32))
+        replay = jnp.asarray([c["toks"][pos] for c in cursors], jnp.int32)
+    print("srv2: continuing steps 10..14")
+    toks2 = replay
+    for pos in range(10, 15):
+        logits, cache2 = step(params, cache2, toks2,
+                              jnp.asarray(pos, jnp.int32))
+        toks2 = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(B):
+            cursors[i]["toks"].append(int(toks2[i]))
+    for i in range(B):
+        save_cursor(f"s{i}", 15, cursors[i]["toks"], "srv2")
+    print("sessions completed on srv2:",
+          [c["toks"][-3:] for c in cursors])
+
+    # --- split-brain: both nodes continue the SAME session ------------------
+    print("\nsplit-brain drill: srv1 recovers, partition, both continue s0")
+    store.network.recover_node("srv1")
+    store.antientropy_round()
+    store.network.partition({"srv1"}, {"srv2"})
+    for node, pos in (("srv1", 16), ("srv2", 17)):
+        res = store.get("session/s0", via=node)
+        cur = json.loads(sorted(res.values)[0])
+        cur["pos"] = pos
+        store.put("session/s0", json.dumps(cur), context=res.context,
+                  via=node, client_id=node)
+    store.network.heal()
+    store.antientropy_round()
+    final = load_cursor("s0", "srv1")
+    print(f"after heal, resolved cursor pos={final['pos']} "
+          f"(both continuations were visible as siblings, none lost)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Distributed checkpointing with DVV-tracked manifests."""
+from .manager import CheckpointManager, RestoreResult
+from .manifest import Manifest, ShardRecord, resolve_manifest_siblings
+from .shards import load_array, load_tree, save_array, save_tree
+
+__all__ = [
+    "CheckpointManager", "RestoreResult",
+    "Manifest", "ShardRecord", "resolve_manifest_siblings",
+    "save_array", "load_array", "save_tree", "load_tree",
+]

@@ -1,0 +1,64 @@
+"""Bulk shard I/O — array bytes on (simulated) blob storage.
+
+Arrays are saved per logical path; on real hardware each host writes only
+its addressable shards (the manifest records the global layout so restore
+can re-shard onto a different mesh).  Checksums let restores detect torn or
+corrupted writes — a manifest referencing a bad shard is rejected and the
+manager falls back to the parent lineage.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .manifest import ShardRecord
+
+
+def _blob_name(run_id: str, step: int, path: str, writer: str) -> str:
+    # Writer-namespaced: concurrent coordinators finalizing the same step
+    # (post-partition) must not clobber each other's bytes — the DVV
+    # manifest layer decides which lineage wins, and its shards must still
+    # exist intact.
+    safe = path.replace("/", "__")
+    return f"{run_id}-step{step:08d}-{writer}-{safe}.npy"
+
+
+def save_array(root: str, run_id: str, step: int, path: str,
+               value: np.ndarray, writer: str = "w") -> ShardRecord:
+    os.makedirs(root, exist_ok=True)
+    fname = _blob_name(run_id, step, path, writer)
+    full = os.path.join(root, fname)
+    value = np.asarray(value)
+    with open(full, "wb") as f:
+        np.save(f, value)
+    checksum = hashlib.sha256(value.tobytes()).hexdigest()[:16]
+    return ShardRecord(path=path, file=fname, shape=tuple(value.shape),
+                       dtype=str(value.dtype), checksum=checksum)
+
+
+def load_array(root: str, record: ShardRecord, *,
+               verify: bool = True) -> np.ndarray:
+    full = os.path.join(root, record.file)
+    value = np.load(full)
+    if tuple(value.shape) != tuple(record.shape) or str(value.dtype) != record.dtype:
+        raise IOError(f"shard {record.file}: shape/dtype mismatch vs manifest")
+    if verify:
+        checksum = hashlib.sha256(value.tobytes()).hexdigest()[:16]
+        if checksum != record.checksum:
+            raise IOError(f"shard {record.file}: checksum mismatch (torn write?)")
+    return value
+
+
+def save_tree(root: str, run_id: str, step: int,
+              tree: Dict[str, np.ndarray],
+              writer: str = "w") -> Tuple[ShardRecord, ...]:
+    return tuple(save_array(root, run_id, step, path, v, writer)
+                 for path, v in sorted(tree.items()))
+
+
+def load_tree(root: str, records: Tuple[ShardRecord, ...],
+              *, verify: bool = True) -> Dict[str, np.ndarray]:
+    return {r.path: load_array(root, r, verify=verify) for r in records}

@@ -1,0 +1,169 @@
+"""Array-encoded DVV algebra — the TPU-native adaptation (DESIGN.md §3).
+
+A production deployment tracks millions of keys; anti-entropy between two
+replica nodes compares the clock sets of every transferred key.  Doing that
+clock-by-clock in Python is the CPU-era formulation; on TPU we batch.
+
+Encoding (per clock, replica universe of fixed size R):
+    vv     : int32[R]   — vv[r] = m, the contiguous range 1..m for replica r
+    dot_id : int32[]    — replica index of the single dot (−1 if none)
+    dot_n  : int32[]    — the dot's event counter n (> vv[dot_id]; 0 if none)
+
+Every clock the store keeps has at most one dot (paper §5.3: all stored
+clocks have exactly one triple component), so this encoding is *exact*, not
+an approximation.  ``repro.kernels.dvv_ops`` provides the Pallas TPU kernel
+for the dominance sweep; this module is the jnp reference implementation
+and the host-side conversion helpers.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dvv import DVV
+
+NO_DOT = -1
+
+
+# ---------------------------------------------------------------------------
+# Host-side conversions (pure Python <-> arrays).
+# ---------------------------------------------------------------------------
+
+def encode(clock: DVV, universe: Sequence[str]) -> Tuple[np.ndarray, int, int]:
+    index = {r: i for i, r in enumerate(universe)}
+    vv = np.zeros(len(universe), dtype=np.int32)
+    dot_id, dot_n = NO_DOT, 0
+    for (r, m, n) in clock.components:
+        if r not in index:
+            raise ValueError(f"replica {r!r} outside universe {universe}")
+        vv[index[r]] = m
+        if n:
+            if dot_id != NO_DOT:
+                raise ValueError("array encoding supports at most one dot")
+            dot_id, dot_n = index[r], n
+    return vv, dot_id, dot_n
+
+
+def decode(vv: np.ndarray, dot_id: int, dot_n: int,
+           universe: Sequence[str]) -> DVV:
+    comps: List[Tuple[str, int, int]] = []
+    for i, r in enumerate(universe):
+        m = int(vv[i])
+        n = int(dot_n) if i == int(dot_id) else 0
+        if m or n:
+            comps.append((r, m, n))
+    return DVV(tuple(comps))
+
+
+def encode_batch(clocks: Sequence[DVV], universe: Sequence[str]):
+    vvs = np.zeros((len(clocks), len(universe)), dtype=np.int32)
+    dot_ids = np.full((len(clocks),), NO_DOT, dtype=np.int32)
+    dot_ns = np.zeros((len(clocks),), dtype=np.int32)
+    for k, c in enumerate(clocks):
+        vvs[k], dot_ids[k], dot_ns[k] = encode(c, universe)
+    return vvs, dot_ids, dot_ns
+
+
+# ---------------------------------------------------------------------------
+# Vectorized clock algebra (jnp).  All functions are jit/vmap friendly and
+# operate on batches: vv [..., R], dot_id [...], dot_n [...].
+# ---------------------------------------------------------------------------
+
+def leq(vx: jnp.ndarray, ix: jnp.ndarray, nx: jnp.ndarray,
+        vy: jnp.ndarray, iy: jnp.ndarray, ny: jnp.ndarray) -> jnp.ndarray:
+    """history(x) ⊆ history(y), batched over leading dims.
+
+    Range coverage per replica r: 1..vx[r] ⊆ (1..vy[r] ∪ {ny if iy==r})
+        ⟺ vx[r] ≤ vy[r]  ∨  (iy==r ∧ vx[r] == ny == vy[r]+1)
+    Dot coverage (if ix != NO_DOT): nx ≤ vy[ix] ∨ (iy==ix ∧ nx==ny)
+    """
+    R = vx.shape[-1]
+    ar = jnp.arange(R, dtype=jnp.int32)
+    iy_b = iy[..., None]
+    ny_b = ny[..., None]
+    dot_extends = (iy_b == ar) & (vx == ny_b) & (vx == vy + 1)
+    range_ok = jnp.all((vx <= vy) | dot_extends, axis=-1)
+
+    has_dot = ix != NO_DOT
+    # gather vy[ix] safely (ix may be -1; clamp and mask)
+    ix_safe = jnp.clip(ix, 0, R - 1)
+    vy_at_ix = jnp.take_along_axis(vy, ix_safe[..., None], axis=-1)[..., 0]
+    dot_ok = (nx <= vy_at_ix) | ((iy == ix) & (nx == ny))
+    dot_ok = jnp.where(has_dot, dot_ok, True)
+    return range_ok & dot_ok
+
+
+def dominates(vx, ix, nx, vy, iy, ny) -> jnp.ndarray:
+    """x dominates y  ⟺  y ≤ x."""
+    return leq(vy, iy, ny, vx, ix, nx)
+
+
+def concurrent(vx, ix, nx, vy, iy, ny) -> jnp.ndarray:
+    return ~leq(vx, ix, nx, vy, iy, ny) & ~leq(vy, iy, ny, vx, ix, nx)
+
+
+def effective_vv(vv: jnp.ndarray, dot_id: jnp.ndarray,
+                 dot_n: jnp.ndarray) -> jnp.ndarray:
+    """Fold the dot into the vector *only where it is contiguous* (n == m+1).
+
+    Used by ``merge_context``: the ⌈·⌉ ceiling of the paper takes max(m, n),
+    which is safe when summarizing a *downset* context.
+    """
+    R = vv.shape[-1]
+    ar = jnp.arange(R, dtype=jnp.int32)
+    at_dot = dot_id[..., None] == ar
+    return jnp.where(at_dot, jnp.maximum(vv, dot_n[..., None]), vv)
+
+
+def merge_context(vvs: jnp.ndarray, dot_ids: jnp.ndarray, dot_ns: jnp.ndarray,
+                  valid: jnp.ndarray) -> jnp.ndarray:
+    """⌈S⌉ per replica over a clock *set* (axis -2), masked by ``valid``.
+
+    Returns a plain vv[..., R] — the context summary used by ``update``.
+    Relies on the §5.4 downset invariant of the context.
+    """
+    eff = effective_vv(vvs, dot_ids, dot_ns)
+    eff = jnp.where(valid[..., None], eff, 0)
+    return jnp.max(eff, axis=-2)
+
+
+def update_clock(ctx_vv: jnp.ndarray, local_max_r: jnp.ndarray,
+                 r_index: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Mint the new clock (paper §5.3) in array form.
+
+    ctx_vv      : [..., R] — merged context ceiling ⌈S⌉
+    local_max_r : [...]    — ⌈Sr⌉_r at the coordinator
+    r_index     : [...]    — coordinator replica index
+    Returns (vv, dot_id, dot_n) with vv = ctx_vv and the dot at r.
+    """
+    dot_n = jnp.maximum(local_max_r, 0) + 1
+    return ctx_vv, r_index.astype(jnp.int32), dot_n.astype(jnp.int32)
+
+
+def sync_mask(vvs: jnp.ndarray, dot_ids: jnp.ndarray, dot_ns: jnp.ndarray,
+              valid: jnp.ndarray) -> jnp.ndarray:
+    """Which clocks of a combined set survive sync (are not strictly dominated).
+
+    vvs [..., K, R]; dot_ids/dot_ns/valid [..., K].  Returns bool [..., K].
+    A clock survives iff no *other valid* clock strictly dominates it.
+    Pairs of equal clocks (same history) keep the lowest index.
+    """
+    K = vvs.shape[-2]
+    vx = vvs[..., :, None, :]
+    vy = vvs[..., None, :, :]
+    ix = dot_ids[..., :, None]
+    iy = dot_ids[..., None, :]
+    nx = dot_ns[..., :, None]
+    ny = dot_ns[..., None, :]
+    le = leq(vx, ix, nx, vy, iy, ny)          # [..., K, K]  x ≤ y
+    ge = leq(vy, iy, ny, vx, ix, nx)          # x ≥ y
+    strictly_below = le & ~ge
+    equal = le & ge
+    idx = jnp.arange(K, dtype=jnp.int32)
+    dup_earlier = equal & (idx[..., None, :] < idx[..., :, None])  # equal to an earlier clock
+    other_valid = valid[..., None, :]
+    dominated = jnp.any((strictly_below | dup_earlier) & other_valid, axis=-1)
+    return valid & ~dominated

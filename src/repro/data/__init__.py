@@ -1,0 +1,3 @@
+from .pipeline import MemmapTokens, PipelineConfig, SyntheticTokens
+
+__all__ = ["PipelineConfig", "SyntheticTokens", "MemmapTokens"]

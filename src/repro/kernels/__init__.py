@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jit'd public wrapper, interpret-mode fallback off-TPU) and
+<name>/ref.py (pure-jnp oracle used by the sweep tests):
+
+  * dvv_ops         — batched dotted-version-vector dominance (the paper's
+                      clock algebra, vectorized for anti-entropy sweeps)
+  * flash_attention — blockwise online-softmax attention (causal, sliding
+                      window, softcap, GQA)
+  * ssd_scan        — Mamba-2 SSD chunked scan (sequential chunk
+                      recurrence + intra-chunk quadratic form)
+"""
+from . import dvv_ops, flash_attention, ssd_scan
+
+__all__ = ["dvv_ops", "flash_attention", "ssd_scan"]

@@ -1,0 +1,6 @@
+from .ops import (
+    antientropy_obsolete, dvv_concurrent, dvv_dominates, dvv_leq,
+)
+
+__all__ = ["dvv_leq", "dvv_dominates", "dvv_concurrent",
+           "antientropy_obsolete"]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: batched dotted-version-vector dominance.
+
+Anti-entropy between replica nodes compares the clock sets of every
+transferred key (paper §4.1); at production scale that is millions of
+``leq`` evaluations per round.  The array encoding (core/batched.py) turns
+one comparison into a handful of int32 vector ops over the replica
+universe — ideal VPU work.  This kernel tiles the key dimension into VMEM
+blocks; the replica dim is padded to the 128-wide lane axis.
+
+Design notes (TPU adaptation, DESIGN.md §3):
+  * the per-clock dot lookup ``vy[ix]`` is a dynamic gather in the jnp
+    reference; here it is a masked lane-sum (`where(lane==ix, vy, 0)`),
+    which maps to VPU selects + a lane reduction instead of a gather;
+  * all scalars ride as [N, 1] columns so every op stays 2-D (sublane ×
+    lane), the layout the TPU vector unit wants.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NO_DOT = -1
+LANES = 128
+DEFAULT_BLOCK = 512
+
+
+def _leq_kernel(vx_ref, ix_ref, nx_ref, vy_ref, iy_ref, ny_ref, out_ref):
+    vx = vx_ref[...]                       # [BN, R]
+    vy = vy_ref[...]
+    ix = ix_ref[...]                       # [BN, 1]
+    nx = nx_ref[...]
+    iy = iy_ref[...]
+    ny = ny_ref[...]
+
+    BN, R = vx.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (BN, R), 1)
+
+    # range coverage: 1..vx[r] ⊆ 1..vy[r] ∪ {ny at iy}
+    dot_extends = (lane == iy) & (vx == ny) & (vx == vy + 1)
+    range_ok = jnp.all((vx <= vy) | dot_extends, axis=1, keepdims=True)
+
+    # dot coverage: nx ≤ vy[ix]  ∨  (ix == iy ∧ nx == ny)
+    vy_at_ix = jnp.sum(jnp.where(lane == ix, vy, 0), axis=1, keepdims=True)
+    dot_ok = (nx <= vy_at_ix) | ((iy == ix) & (nx == ny))
+    has_dot = ix != NO_DOT
+    ok = range_ok & jnp.where(has_dot, dot_ok, True)
+    out_ref[...] = ok.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dvv_leq_pallas(vx, ix, nx, vy, iy, ny, *, block: int = DEFAULT_BLOCK,
+                   interpret: bool = True):
+    """history(x_k) ⊆ history(y_k) for k in [N].
+
+    vx, vy: int32[N, R]; ix/nx/iy/ny: int32[N].  Returns bool[N].
+    """
+    N, R = vx.shape
+    Rp = max(LANES, ((R + LANES - 1) // LANES) * LANES)
+    Np = ((N + block - 1) // block) * block
+
+    def pad2(a, fill=0):
+        return jnp.pad(a, ((0, Np - N), (0, Rp - R)), constant_values=fill)
+
+    def pad1(a, fill=0):
+        return jnp.pad(a, (0, Np - N), constant_values=fill)[:, None]
+
+    args = (pad2(vx), pad1(ix, NO_DOT), pad1(nx), pad2(vy),
+            pad1(iy, NO_DOT), pad1(ny))
+    grid = (Np // block,)
+    out = pl.pallas_call(
+        _leq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, Rp), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, Rp), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, 1), jnp.int8),
+        interpret=interpret,
+    )(*args)
+    return out[:N, 0].astype(bool)

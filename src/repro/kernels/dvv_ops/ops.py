@@ -1,0 +1,40 @@
+"""Jitted public wrappers over the DVV Pallas kernel.
+
+``interpret`` defaults to True off-TPU (the kernel body executes in Python
+on CPU for correctness); on TPU backends the compiled kernel runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dvv_ops import dvv_leq_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dvv_leq(vx, ix, nx, vy, iy, ny):
+    """Batched history-inclusion: bool[N]."""
+    return dvv_leq_pallas(vx, ix, nx, vy, iy, ny, interpret=_interpret())
+
+
+def dvv_dominates(vx, ix, nx, vy, iy, ny):
+    """x dominates y ⟺ y ≤ x."""
+    return dvv_leq(vy, iy, ny, vx, ix, nx)
+
+
+def dvv_concurrent(vx, ix, nx, vy, iy, ny):
+    a = dvv_leq(vx, ix, nx, vy, iy, ny)
+    b = dvv_leq(vy, iy, ny, vx, ix, nx)
+    return ~a & ~b
+
+
+def antientropy_obsolete(vx, ix, nx, vy, iy, ny):
+    """Anti-entropy sweep primitive: for each key k, is the local version
+    x_k *strictly dominated* by the incoming y_k (and hence discardable)?
+    Strict: x ≤ y ∧ ¬(y ≤ x)."""
+    le = dvv_leq(vx, ix, nx, vy, iy, ny)
+    ge = dvv_leq(vy, iy, ny, vx, ix, nx)
+    return le & ~ge

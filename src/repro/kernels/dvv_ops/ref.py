@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the batched DVV kernels.
+
+Thin re-exports of ``repro.core.batched`` — the reference semantics the
+Pallas kernel is validated against (which is itself fuzz-checked against
+the pure-Python ``repro.core.dvv`` clocks).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.batched import NO_DOT, dominates, leq, sync_mask
+
+
+def leq_ref(vx, ix, nx, vy, iy, ny):
+    return leq(vx, ix, nx, vy, iy, ny)
+
+
+def dominates_ref(vx, ix, nx, vy, iy, ny):
+    return dominates(vx, ix, nx, vy, iy, ny)
+
+
+def concurrent_ref(vx, ix, nx, vy, iy, ny):
+    a = leq(vx, ix, nx, vy, iy, ny)
+    b = leq(vy, iy, ny, vx, ix, nx)
+    return ~a & ~b
+
+
+def sync_mask_ref(vvs, dot_ids, dot_ns, valid):
+    return sync_mask(vvs, dot_ids, dot_ns, valid)

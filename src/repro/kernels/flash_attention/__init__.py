@@ -1,0 +1,4 @@
+from .flash_attention import flash_attention
+from .ops import gqa_flash_attention
+
+__all__ = ["flash_attention", "gqa_flash_attention"]

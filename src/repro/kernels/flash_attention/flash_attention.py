@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (forward): blockwise online softmax.
+
+Grid: (batch·heads, q_blocks, kv_blocks) — the kv axis is the innermost
+(sequential) grid dim; running max / denominator / accumulator live in VMEM
+scratch across kv steps and the output block is written on the last step.
+
+BlockSpecs tile q/out to [Bq, D] and k/v to [Bk, D] in VMEM: with
+Bq = Bk = 512 and D ≤ 256 the working set is ≤ 0.75 MB + scratch ≈ 1 MB,
+comfortably inside the ~16 MB VMEM budget, and matmul dims (512×D×512) are
+MXU-aligned (multiples of 128).
+
+Supports: causal masking, sliding window, attention-logit softcap.
+Causality-induced dead blocks are skipped with ``pl.when`` guards (the
+block still iterates but does no FLOPs — the index map cannot prune a 3-D
+grid without a scan DSL).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_k: int, n_kv_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # causal pruning: a block is dead iff its earliest k exceeds the latest q
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window:
+        live = live & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[...].astype(jnp.float32)            # [Bq, D]
+        k = k_ref[...].astype(jnp.float32)            # [Bk, D]
+        v = v_ref[...]                                # [Bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [Bq, Bk]
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, dtype=bool)
+        if causal:
+            ok &= kp <= qp
+        if window:
+            ok &= kp > qp - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # [Bq, 1]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # dead rows -> exp(NEG)≈0
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)       # [Bq, D]
+        acc_ref[...] = acc_ref[...] * corr + pv
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q [B,H,Sq,D]; k,v [B,H,Sk,D] (KV pre-expanded). -> [B,H,Sq,D]."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = scale or D ** -0.5
+    nq = Sq // block_q
+    nk = Sk // block_k
+
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running denom l
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

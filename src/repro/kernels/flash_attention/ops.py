@@ -1,0 +1,34 @@
+"""Jitted GQA-aware wrapper: maps the model's attention call onto the
+flash kernel (expanding KV heads lazily per q-head group)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gqa_flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, scale: float | None = None,
+                        block_q: int = 512, block_k: int = 512):
+    """q [B,S,H,Dh]; k,v [B,S,KV,Dh] -> [B,S,H,Dh].
+
+    KV heads are expanded to query heads *per kernel call*; on TPU the
+    expansion is a broadcast in HBM->VMEM streaming, not a materialized 8×
+    copy (XLA fuses the repeat into the block loads).
+    """
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qt = q.transpose(0, 2, 1, 3)                     # [B,H,S,D]
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1)
+    out = flash_attention(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        scale=scale, block_q=block_q, block_k=block_k,
+        interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)

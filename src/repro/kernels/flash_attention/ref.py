@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel: the naive S²
+materialization with identical masking/softcap semantics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int = 0,
+            softcap: float = 0.0, scale: float | None = None) -> jnp.ndarray:
+    """q [B,H,Sq,D]; k,v [B,H,Sk,D] (KV already expanded to H). -> [B,H,Sq,D]."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale or D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kp[None, :] <= qp[:, None]
+    if window:
+        ok &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)

@@ -1,0 +1,4 @@
+from .ops import ssd_scan
+from .ssd_scan import ssd_scan_pallas
+
+__all__ = ["ssd_scan", "ssd_scan_pallas"]

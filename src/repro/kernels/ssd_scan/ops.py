@@ -1,0 +1,16 @@
+"""Jitted wrapper selecting compiled-vs-interpret and chunk size."""
+from __future__ import annotations
+
+import jax
+
+from .ssd_scan import ssd_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd_scan(xh, dt, A, Bc, Cc, D, *, chunk: int = 128):
+    """Drop-in for models.ssm.ssd_chunked (forward)."""
+    return ssd_scan_pallas(xh, dt, A, Bc, Cc, D, chunk=chunk,
+                           interpret=_interpret())

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the SSD kernel: re-export of the model's chunked
+implementation (itself validated against the naive recurrence in tests)."""
+from __future__ import annotations
+
+from ...models.ssm import ssd_chunked
+
+
+def ssd_ref(xh, dt, A, Bc, Cc, D, chunk):
+    """xh [B,S,H,P], dt [B,S,H] (softplus-ed), A [H] (<0), Bc/Cc [B,S,N],
+    D [H] -> (y [B,S,H,P], h_final [B,H,P,N])."""
+    return ssd_chunked(xh, dt, A, Bc, Cc, D, chunk)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (forward).
+
+Grid: (batch, heads, chunks) with the chunk axis innermost/sequential; the
+running inter-chunk state h [P, N] lives in VMEM scratch.  Per step the
+kernel computes the intra-chunk quadratic form (two [c,c]·[c,P]-class
+matmuls on the MXU) plus the state in/out projections, then advances h.
+
+Block sizes: chunk c=128..256, P=64, N=128 → per-step VMEM:
+x [c,P] + B/C [c,N] + decay [c,c] + h [P,N] + y [c,P] ≈ 0.5 MB fp32 — tiny;
+the MXU dims (c×N, c×c, c×P) are all multiples of 64/128.
+
+TPU adaptation (DESIGN.md §3): the CUDA SSD kernel fuses conv1d + proj;
+here those stay in XLA (they fuse well) and the kernel owns exactly the
+part XLA does badly — the sequential chunk recurrence with the quadratic
+intra-chunk term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, hout_ref,
+                h_ref, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # [c, P]
+    dt = dt_ref[...].astype(jnp.float32)      # [c, 1]
+    A = a_ref[0, 0]                           # scalar (per head)
+    Bm = b_ref[...].astype(jnp.float32)       # [c, N]
+    Cm = c_ref[...].astype(jnp.float32)       # [c, N]
+    D = d_ref[0, 0]
+
+    a = dt * A                                # [c,1] per-step log decay
+    acs = jnp.cumsum(a, axis=0)               # [c,1]
+
+    # intra-chunk: scores[t,s] = (C_t·B_s) exp(acs_t - acs_s) dt_s, s<=t
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [c,c]
+    diff = acs - acs.T                        # [c,c] (t row, s col)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = cb * decay * dt.T                # [c,c]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [c,P]
+
+    # inter-chunk: y += (C_t exp(acs_t)) · h_prev^T   (h [P,N])
+    h = h_ref[...]
+    y += jax.lax.dot_general(Cm * jnp.exp(acs), h,
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    y_ref[...] = (y + x * D).astype(y_ref.dtype)
+
+    # state update: h_new = exp(sum a) h + sum_s exp(acs_end - acs_s) dt_s x_s B_s^T
+    tail = jnp.exp(acs[-1:] - acs) * dt       # [c,1]
+    hx = jax.lax.dot_general(x * tail, Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [P,N]
+    h_ref[...] = jnp.exp(acs[-1, 0]) * h + hx
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        hout_ref[...] = h_ref[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(xh, dt, A, Bc, Cc, D, *, chunk: int = 128,
+                    interpret: bool = True):
+    """xh [B,S,H,P]; dt [B,S,H] (softplus-ed); A [H] (<0); Bc/Cc [B,S,N];
+    D [H].  Returns (y [B,S,H,P], h_final [B,H,P,N])."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    # layout: per (batch, head) streams
+    x_l = xh.transpose(0, 2, 1, 3)            # [B,H,S,P]
+    dt_l = dt.transpose(0, 2, 1)[..., None]   # [B,H,S,1]
+    a_l = jnp.broadcast_to(A[None, :, None, None], (B, H, 1, 1))
+    d_l = jnp.broadcast_to(D[None, :, None, None], (B, H, 1, 1))
+    b_l = jnp.broadcast_to(Bc[:, None], (B, H, S, N))
+    c_l = jnp.broadcast_to(Cc[:, None], (B, H, S, N))
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=nc)
+    y, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((None, None, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, 1, 1), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, 1, 1), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((None, None, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), xh.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x_l, dt_l, a_l, b_l, c_l, d_l)
+    return y.transpose(0, 2, 1, 3), h_final

@@ -1,0 +1,5 @@
+"""Launchers: mesh construction, sharding rules, dry-run, train/serve."""
+from .mesh import make_mesh, make_production_mesh
+from .sharding import Sharder
+
+__all__ = ["make_production_mesh", "make_mesh", "Sharder"]

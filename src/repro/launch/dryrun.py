@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count on first
+init, and the production meshes need 512 placeholder host devices.  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --json out.json
+
+Each cell jits the step with explicit in/out shardings, lowers against
+ShapeDtypeStruct inputs (no allocation), compiles, and records
+``memory_analysis`` / ``cost_analysis`` / the collective-bytes parse used
+by EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import CELLS, REGISTRY, SHAPES, cell_skip_reason, cells, get_config
+from ..optim import AdamWConfig
+from .mesh import make_production_mesh
+from .roofline import collective_bytes_by_kind, roofline_report
+from .sharding import Sharder
+from .steps import (
+    batch_specs, decode_input_specs, input_specs, make_decode_step,
+    make_prefill_step, make_train_step, param_state_specs,
+)
+
+BIG_ARCH_THRESHOLD = 100e9   # params; above this use bf16 optimizer moments
+
+
+def opt_config_for(cfg) -> AdamWConfig:
+    moment = "bfloat16" if cfg.param_count() > BIG_ARCH_THRESHOLD else "float32"
+    return AdamWConfig(moment_dtype=moment,
+                       master_weights=(cfg.param_dtype == "bfloat16"))
+
+
+def _named(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree (None leaves pass through)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def lower_cell(cfg, shape, mesh, *, donate: bool = True,
+               sharder: Optional[Sharder] = None, mode: str = "train"):
+    """Returns (lowered, compiled, wallclock_seconds)."""
+    from contextlib import ExitStack
+
+    from ..models.sharding_ctx import activation_sharding
+    from .mesh import data_axes
+
+    sharder = sharder or Sharder(mesh, cfg, mode=mode)
+    t0 = time.time()
+    with activation_sharding(mesh, data_axes(mesh),
+                             replicate_batch=(mode == "decode_tp")):
+        return _lower_cell_inner(cfg, shape, mesh, donate, sharder, t0)
+
+
+def _lower_cell_inner(cfg, shape, mesh, donate, sharder, t0):
+    if shape.kind == "train":
+        opt_cfg = opt_config_for(cfg)
+        step = make_train_step(cfg, opt_cfg)
+        p_specs, o_specs = param_state_specs(cfg, opt_cfg)
+        p_sh = _named(mesh, sharder.param_pspecs())
+        o_sh = _named(mesh, sharder.opt_pspecs(
+            with_master=opt_cfg.master_weights))
+        b_specs = batch_specs(cfg, shape)
+        b_sh = _named(mesh, sharder.batch_pspecs(b_specs))
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        lowered = jitted.lower(p_specs, o_specs, b_specs)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        p_specs, _ = param_state_specs(cfg, AdamWConfig())
+        p_sh = _named(mesh, sharder.param_pspecs())
+        b_specs = batch_specs(cfg, shape)
+        b_sh = _named(mesh, sharder.batch_pspecs(b_specs))
+        jitted = jax.jit(
+            step, in_shardings=(p_sh, b_sh),
+            out_shardings=_named(mesh, sharder.logits_pspec()))
+        lowered = jitted.lower(p_specs, b_specs)
+    else:  # decode
+        step = make_decode_step(cfg)
+        p_specs, _ = param_state_specs(cfg, AdamWConfig())
+        p_sh = _named(mesh, sharder.param_pspecs())
+        from jax.sharding import PartitionSpec as _P
+        d = decode_input_specs(cfg, shape)
+        c_sh = _named(mesh, sharder.cache_pspecs(d["cache"]))
+        if sharder.mode == "decode_tp":
+            # weight-stationary decode: tokens replicated (KB-scale)
+            t_sh = _named(mesh, _P(*(None,) * len(d["tokens"].shape)))
+        else:
+            t_sh = _named(mesh, sharder.batch_pspecs({"t": d["tokens"]})["t"])
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, t_sh, None),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        lowered = jitted.lower(p_specs, d["cache"], d["tokens"], d["pos"])
+    compiled = lowered.compile()
+    return lowered, compiled, time.time() - t0
+
+
+def extrapolated_costs(cfg, shape, mesh, mode: str = "train") -> Dict[str, Any]:
+    """Exact per-device flops/bytes/collectives via two-point linear fit.
+
+    ``cost_analysis`` counts while-loop bodies ONCE (verified in
+    tests/test_roofline.py), so the real scanned program undercounts by
+    ~n_groups×.  Costs are exactly linear in the group count, so we compile
+    1-group and 2-group *unrolled* variants (tiny HLO, fast) and
+    extrapolate: cost(G) = cost(1) + (cost(2) - cost(1)) · (G - 1).
+    """
+    from dataclasses import replace
+
+    from .roofline import collective_bytes_detailed, correct_promoted_f32
+
+    L = len(cfg.pattern)
+    points = []
+    for k in (1, 2):
+        small = replace(cfg, name=f"{cfg.name}~g{k}", n_layers=k * L,
+                        scan_unroll=True)
+        _, compiled, _ = lower_cell(small, shape, mesh, donate=False,
+                                    mode=mode)
+        cost = compiled.cost_analysis()
+        detailed = collective_bytes_detailed(compiled.as_text())
+        if cfg.param_dtype == "bfloat16":
+            # undo the XLA:CPU bf16->f32 promotion (see roofline.py)
+            coll = correct_promoted_f32(detailed)
+        else:
+            coll = {k_: sum(v.values()) for k_, v in detailed.items()}
+        points.append((float(cost.get("flops", 0.0)),
+                       float(cost.get("bytes accessed", 0.0)), coll))
+    (f1, b1, c1), (f2, b2, c2) = points
+    G = cfg.n_groups
+    kinds = set(c1) | set(c2)
+    coll = {k: max(c1.get(k, 0) + (c2.get(k, 0) - c1.get(k, 0)) * (G - 1), 0)
+            for k in kinds}
+    return {
+        "flops": f1 + (f2 - f1) * (G - 1),
+        "bytes": b1 + (b2 - b1) * (G - 1),
+        "collectives": coll,
+    }
+
+
+def analyze(cfg, shape, mesh_name, lowered, compiled, seconds,
+            costs: Dict[str, Any]) -> Dict[str, Any]:
+    mem = compiled.memory_analysis()
+    n_chips = 512 if mesh_name == "multi" else 256
+    report = roofline_report(
+        cfg=cfg, shape=shape, n_chips=n_chips,
+        flops_per_device=costs["flops"],
+        bytes_per_device=costs["bytes"],
+        collective_bytes_per_device=sum(costs["collectives"].values()),
+    )
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": mesh_name,
+        "compile_seconds": round(seconds, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0) or 0)
+            + (getattr(mem, "argument_size_in_bytes", 0) or 0),
+        },
+        "cost": {"flops": costs["flops"], "bytes accessed": costs["bytes"]},
+        "collectives": costs["collectives"],
+        "roofline": report,
+    }
+
+
+VARIANTS = ("baseline", "bf16w", "bf16w_cap1", "bf16w_nodp",
+            "bf16w_remat", "bf16w_cap1_remat")
+
+
+def apply_variant(cfg, variant: str):
+    """Named optimization variants for the §Perf hillclimb."""
+    from dataclasses import replace
+    if variant == "baseline":
+        return cfg
+    if variant == "bf16w":
+        # Iter-1: bf16 parameter storage (fp32 master in optimizer):
+        # halves FSDP weight gathers + gradient reductions.
+        return replace(cfg, param_dtype="bfloat16")
+    if variant == "bf16w_cap1":
+        # Iter-2 (MoE): capacity factor 1.25 -> 1.0 shrinks the dispatch/
+        # combine one-hot tensors and expert buffers by 20%.
+        return replace(cfg, param_dtype="bfloat16", capacity_factor=1.0)
+    if variant == "bf16w_nodp":
+        # Iter-2 (decode): weight-stationary 2-D tensor parallelism for
+        # serving — weights never gathered per step.
+        return replace(cfg, param_dtype="bfloat16")
+    if variant == "bf16w_remat":
+        # Iter-2/3 (trains): save matmul outputs in the remat stash — the
+        # backward skips recomputing dots AND re-gathering their weights.
+        return replace(cfg, param_dtype="bfloat16", remat_policy="dots")
+    if variant == "bf16w_cap1_remat":
+        return replace(cfg, param_dtype="bfloat16", capacity_factor=1.0,
+                       remat_policy="dots")
+    raise ValueError(variant)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             verbose: bool = True, variant: str = "baseline") -> Dict[str, Any]:
+    cfg = apply_variant(get_config(arch), variant)
+    shape = SHAPES[shape_name]
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "skipped": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    mode = ("decode_tp" if variant == "bf16w_nodp"
+            and shape.kind == "decode" else "train")
+    lowered, compiled, secs = lower_cell(cfg, shape, mesh, mode=mode)
+    costs = extrapolated_costs(cfg, shape, mesh, mode=mode)
+    result = analyze(cfg, shape, mesh_name, lowered, compiled, secs, costs)
+    result["variant"] = variant
+    if verbose:
+        mem = result["memory"]
+        rl = result["roofline"]
+        print(f"[OK] {arch} × {shape_name} × {mesh_name}-pod "
+              f"({secs:.1f}s compile)")
+        print(f"     per-device bytes: args={_gb(mem['argument_bytes'])} "
+              f"temp={_gb(mem['temp_bytes'])}")
+        print(f"     roofline: compute={rl['compute_s']:.2e}s "
+              f"memory={rl['memory_s']:.2e}s "
+              f"collective={rl['collective_s']:.2e}s "
+              f"-> bound={rl['bound']}")
+    return result
+
+
+def _gb(b: Optional[int]) -> str:
+    return "?" if b is None else f"{b / 2**30:.2f}GiB"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=VARIANTS)
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    args = ap.parse_args()
+
+    if args.list:
+        for cfg, shape, reason in cells(include_skipped=True):
+            status = f"SKIP ({reason})" if reason else "run"
+            print(f"{cfg.name:26s} {shape.name:12s} {status}")
+        return 0
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    targets = []
+    if args.all:
+        targets = [(cfg.name, sh.name) for cfg, sh, _ in CELLS]
+    else:
+        archs = [args.arch] if args.arch else sorted(REGISTRY)
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        targets = [(a, s) for a in archs for s in shapes]
+
+    results, failures = [], 0
+    for (arch, shape_name) in targets:
+        cfg = get_config(arch)
+        if cell_skip_reason(cfg, SHAPES[shape_name]):
+            continue
+        for mesh_name in meshes:
+            try:
+                results.append(run_cell(arch, shape_name, mesh_name,
+                                        variant=args.variant))
+            except Exception as e:   # a failing cell is a bug in the system
+                failures += 1
+                traceback.print_exc()
+                results.append({"arch": arch, "shape": shape_name,
+                                "mesh": mesh_name, "error": repr(e)})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.json} ({len(results)} cells, {failures} failures)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,96 @@
+"""Step functions (train / prefill / decode) + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` builds weak-type-correct, shardable stand-ins
+for every model input — the dry-run lowers against these without allocating
+a byte.  The same builders are reused (with real arrays) by the runtime.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, decode_step, init_cache, loss_fn
+from ..models.lm import forward, init_params, param_specs
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+from ..configs import ShapeSpec
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.input_mode == "tokens":
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32)}
+    else:
+        batch = {"embeddings": sds((B, S, cfg.d_model), jnp.bfloat16),
+                 "labels": sds((B, S), jnp.int32)}
+        if cfg.mrope:
+            batch["positions"] = sds((3, B, S), jnp.int32)
+    return batch
+
+
+def param_state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig
+                      ) -> Tuple[Any, Any]:
+    p_specs = param_specs(cfg)
+    o_specs = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), p_specs)
+    return p_specs, o_specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    if cfg.input_mode == "tokens":
+        tok = sds((B,), jnp.int32)
+    else:
+        tok = sds((B, cfg.d_model), jnp.bfloat16)
+    return {
+        "cache": cache_specs(cfg, B, shape.seq_len),
+        "tokens": tok,
+        "pos": sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """All inputs for the shape's step kind, keyed by argument name."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, shape)}
+    return decode_input_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, _ = forward(params, batch, cfg)
+        return logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg)
+    return serve_step

@@ -1,0 +1,19 @@
+"""Model zoo: composable pure-JAX transformer / SSM / MoE stack."""
+from .attention import AttnSpec, attention, decode_attention, init_kv_cache
+from .config import LayerSpec, ModelConfig
+from .layers import cross_entropy, rms_norm, softcap
+from .lm import (
+    count_params, decode_step, forward, init_cache, init_params, loss_fn,
+    param_specs,
+)
+from .moe import MoESpec, moe_ffn
+from .ssm import SSMSpec, ssd_chunked, ssm_forward
+
+__all__ = [
+    "ModelConfig", "LayerSpec", "AttnSpec", "MoESpec", "SSMSpec",
+    "forward", "loss_fn", "decode_step", "init_params", "init_cache",
+    "param_specs", "count_params",
+    "attention", "decode_attention", "init_kv_cache",
+    "moe_ffn", "ssm_forward", "ssd_chunked",
+    "rms_norm", "softcap", "cross_entropy",
+]

@@ -1,0 +1,228 @@
+"""Attention: GQA/MQA, sliding windows, logit softcap, qk-norm, RoPE/M-RoPE.
+
+Pure-jnp reference path (always available, used on CPU and by the dry-run);
+the Pallas flash kernel (``repro.kernels.flash_attention``) is swapped in
+via ``use_pallas`` on real TPU hardware.
+
+Shapes: x [B, S, d]; weights wq [d, H, Dh], wk/wv [d, KVH, Dh],
+wo [H, Dh, d].  Heads (or head_dim, for 16-indivisible head counts) are
+sharded over the "model" mesh axis by the partition rules in
+``repro.launch.sharding``.
+
+GQA is computed with *grouped einsums* — query heads are reshaped to
+[KV, G] groups and contracted directly against the un-expanded KV tensors.
+Materializing repeated KV would multiply decode-cache reads by H/KV (8× for
+most assigned archs), which is exactly the memory-roofline term decode is
+bound by.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mrope, apply_rope, rms_norm, softcap
+
+NEG_INF = -2.0e38
+
+
+@dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float = 0.0
+    sliding_window: int = 0       # 0 = full attention
+    causal: bool = True
+    mrope: bool = False
+    query_scale: Optional[float] = None  # default 1/sqrt(head_dim)
+
+
+def init_attn_params(rng, d_model: int, spec: AttnSpec, dtype) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    H, KV, Dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, H, Dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, KV, Dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, KV, Dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (H, Dh, d_model)) * s).astype(dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.ones((Dh,), dtype)
+    return p
+
+
+def _project_qkv(params, x, spec: AttnSpec, positions):
+    """Returns q [B,S,H,Dh], k/v [B,S,KV,Dh] with rope + qk-norm applied."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if spec.mrope:
+        q = apply_mrope(q, positions, theta=spec.rope_theta)
+        k = apply_mrope(k, positions, theta=spec.rope_theta)
+    else:
+        q = apply_rope(q, positions, theta=spec.rope_theta)
+        k = apply_rope(k, positions, theta=spec.rope_theta)
+    return q, k, v
+
+
+def _group_q(q: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """[B,S,H,Dh] -> [B,S,KV,G,Dh] with G = H // KV."""
+    B, S, H, Dh = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, Dh)
+
+
+def _mask_bias(q_pos, k_pos, spec: AttnSpec):
+    """Additive bias [Sq, Sk] encoding causality + sliding window."""
+    ok = jnp.ones((q_pos.shape[-1], k_pos.shape[-1]), dtype=bool)
+    if spec.causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if spec.sliding_window:
+        ok &= k_pos[None, :] > q_pos[:, None] - spec.sliding_window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_naive(qg, k, v, q_pos, k_pos, spec: AttnSpec) -> jnp.ndarray:
+    """Reference S²-materializing attention. qg [B,Sq,KV,G,Dh]."""
+    scale = spec.query_scale or spec.head_dim ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if spec.attn_softcap:
+        scores = softcap(scores, spec.attn_softcap)
+    scores = scores + _mask_bias(q_pos, k_pos, spec)[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def _attend_chunked(qg, k, v, q_pos, k_pos, spec: AttnSpec,
+                    chunk: int, unroll: bool = False) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks (the XLA-level flash
+    formulation): peak intermediate is [B,KV,G,Sq,chunk] instead of
+    [...,Sq,Sk].  Exact — same math as _attend_naive."""
+    B, Sq, KV, G, Dh = qg.shape
+    Sk = k.shape[1]
+    nc = Sk // chunk
+    assert nc * chunk == Sk, (Sk, chunk)
+    scale = spec.query_scale or spec.head_dim ** -0.5
+    kr = jnp.moveaxis(k.reshape(B, nc, chunk, KV, Dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nc, chunk, KV, Dh), 1, 0)
+    kpr = jnp.moveaxis(k_pos.reshape(nc, chunk), 0, 0)
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, Sq, Dh), jnp.float32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, kp_c = inp
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_c).astype(jnp.float32) \
+            * scale
+        if spec.attn_softcap:
+            s = softcap(s, spec.attn_softcap)
+        s = s + _mask_bias(q_pos, kp_c, spec)[None, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(qg.dtype), v_c)
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kr, vr, kpr),
+                                  unroll=nc if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]             # [B,KV,G,Sq,Dh]
+    return jnp.moveaxis(out, 3, 1).astype(qg.dtype)          # [B,Sq,KV,G,Dh]
+
+
+def attention(params: Dict, x: jnp.ndarray, spec: AttnSpec, *,
+              positions: Optional[jnp.ndarray] = None,
+              chunk: int = 0, unroll: bool = False,
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). x: [B, S, d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        pos1d = jnp.arange(S, dtype=jnp.int32)
+        positions = jnp.broadcast_to(pos1d, (3, B, S)) if spec.mrope \
+            else jnp.broadcast_to(pos1d, (B, S))
+    q, k, v = _project_qkv(params, x, spec, positions)
+    pos1d = positions[0] if spec.mrope else positions
+    q_pos = pos1d[0]
+    H = spec.n_heads
+    if use_pallas:
+        from ..kernels.flash_attention import gqa_flash_attention
+        bq = max(min(512, S), 16)
+        ctx = gqa_flash_attention(
+            q, k, v, causal=spec.causal, window=spec.sliding_window,
+            softcap=spec.attn_softcap, scale=spec.query_scale,
+            block_q=bq, block_k=bq)
+        ctx = ctx.reshape(B, S, H, spec.head_dim)
+        return jnp.einsum("bqhk,hkd->bqd", ctx,
+                          params["wo"].astype(x.dtype))
+    qg = _group_q(q, spec.n_kv_heads)                        # [B,S,KV,G,Dh]
+    if chunk and S % min(chunk, S) == 0:
+        ctx = _attend_chunked(qg, k, v, q_pos, q_pos, spec, min(chunk, S),
+                              unroll=unroll)
+    else:
+        ctx = _attend_naive(qg, k, v, q_pos, q_pos, spec)
+    ctx = ctx.reshape(B, S, H, spec.head_dim)
+    return jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache.
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, spec: AttnSpec, dtype
+                  ) -> Dict[str, jnp.ndarray]:
+    KV, Dh = spec.n_kv_heads, spec.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, KV, Dh), dtype),
+        "v": jnp.zeros((batch, max_len, KV, Dh), dtype),
+    }
+
+
+def decode_attention(params: Dict, x: jnp.ndarray, cache: Dict,
+                     pos: jnp.ndarray, spec: AttnSpec
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step. x: [B, 1, d]; cache k/v [B, Smax, KV, Dh];
+    pos: scalar int32 — the index being written."""
+    B = x.shape[0]
+    Smax = cache["k"].shape[1]
+    if spec.mrope:
+        positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, spec, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    qg = _group_q(q, spec.n_kv_heads)                        # [B,1,KV,G,Dh]
+    scale = spec.query_scale or spec.head_dim ** -0.5
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, k_cache.astype(x.dtype)
+    ).astype(jnp.float32) * scale
+    if spec.attn_softcap:
+        scores = softcap(scores, spec.attn_softcap)
+    kpos = jnp.arange(Smax, dtype=jnp.int32)
+    ok = kpos <= pos
+    if spec.sliding_window:
+        ok &= kpos > pos - spec.sliding_window
+    scores = jnp.where(ok[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache.astype(x.dtype))
+    ctx = ctx.reshape(B, 1, spec.n_heads, spec.head_dim)
+    # decode_tp: heads over "model", head_dim over the data axes — matches
+    # wo's stationary layout so the output contraction psums activations
+    from .sharding_ctx import constrain
+    ctx = constrain(ctx, "batch", None, "model", "tpd")
+    out = jnp.einsum("bqhk,hkd->bqd", ctx, params["wo"].astype(x.dtype))
+    return out, {"k": k_cache, "v": v_cache}

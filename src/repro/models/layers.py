@@ -1,0 +1,141 @@
+"""Shared neural layers (pure JAX, no flax): norms, activations, RoPE.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays, stored in ``param_dtype``
+    (fp32 by default) and cast to ``compute_dtype`` (bf16) inside ops;
+  * RoPE uses the *interleaved-pairs* formulation (GPT-NeoX style): pairs
+    ``(2i, 2i+1)`` rotate together.  Pairs stay device-local when head_dim
+    is sharded across the model axis — which is how archs with
+    16-indivisible head counts (qwen3-14b: 40H, gemma-2b: 8H, qwen2-vl:
+    28H) are tensor-parallelized (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+             zero_centered: bool = False) -> jnp.ndarray:
+    """RMSNorm; ``zero_centered`` uses the Gemma (1+scale) convention."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if zero_centered:
+        w = 1.0 + w
+    return (y * w).astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+ACTIVATIONS = {"swiglu": swiglu, "geglu": geglu}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (interleaved-pairs formulation).
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Per-pair inverse frequencies, shape [head_dim // 2]."""
+    k = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    return 1.0 / (theta ** (2.0 * k / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    D = x.shape[-1]
+    inv = rope_freqs(D, theta)                                # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv      # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]                          # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x_even = x32[..., 0::2]
+    x_odd = x32[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_odd * cos + x_even * sin
+    out = jnp.stack([out_even, out_odd], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def mrope_sections(head_dim: int) -> Tuple[int, int, int]:
+    """Qwen2-VL proportions (16, 24, 24)/64 of the pair dim, any head_dim."""
+    half = head_dim // 2
+    t = half // 4
+    h = (half - t) // 2
+    return (t, h, half - t - h)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections: Optional[Tuple[int, int, int]] = None,
+                theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the pair dimension is split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  ``positions``: [3, ..., S] (t/h/w ids; equal for pure text).
+
+    x: [..., S, H, D] with sum(sections) == D // 2.
+    """
+    D = x.shape[-1]
+    if sections is None:
+        sections = mrope_sections(D)
+    assert sum(sections) == D // 2, (sections, D)
+    inv = rope_freqs(D, theta)                                # [D/2]
+    # build a per-pair position by selecting the section's position stream
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=D // 2)
+    # positions: [3, ..., S] -> [..., S, D/2] by gathering along axis 0
+    pos = jnp.take(positions, sec_id, axis=0)                 # [D/2, ..., S]? no:
+    # jnp.take with axis=0 gives [D/2, ..., S]; move pair axis last
+    pos = jnp.moveaxis(pos, 0, -1)                            # [..., S, D/2]
+    ang = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x_even = x32[..., 0::2]
+    x_odd = x32[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_odd * cos + x_even * sin
+    out = jnp.stack([out_even, out_odd], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token CE in fp32. logits [..., V], labels [...] int.
+
+    The gold logit is extracted with a one-hot contraction, NOT
+    take_along_axis: a positional gather over a vocab-sharded logits tensor
+    forces SPMD to all-gather the full [B,S,V] fp32 logits (12+ GiB/device
+    at 256k vocab); the one-hot product stays sharded and reduces with one
+    tiny psum.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,321 @@
+"""Language-model assembly: embedding → scanned block groups → head.
+
+Parameters are nested dicts; per-group block parameters are *stacked* along
+a leading ``n_groups`` axis and consumed by ``lax.scan`` (HLO size stays
+O(pattern length), independent of depth).  Heterogeneous patterns (jamba's
+7:1 mamba:attn interleave, gemma-2's local/global alternation, MoE
+periods) are unrolled *inside* the scan body; each layer kind keeps its own
+stacked sub-tree indexed statically within the group.
+
+Three entry points per config:
+  * ``forward(params, batch)``          — logits for training/prefill
+  * ``loss_fn(params, batch)``          — mean CE + MoE aux losses
+  * ``decode_step(params, cache, tok)`` — one-token serve step with cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    AttnSpec, attention, decode_attention, init_attn_params, init_kv_cache,
+)
+from .config import LayerSpec, ModelConfig
+from .layers import ACTIVATIONS, cross_entropy, rms_norm, softcap
+from .moe import MoESpec, init_moe_params, moe_ffn
+from .sharding_ctx import constrain
+from .ssm import (
+    SSMSpec, decode_ssm, init_ssm_cache, init_ssm_params, ssm_forward,
+)
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, spec: LayerSpec) -> AttnSpec:
+    sliding = cfg.sliding_window if spec.mixer in ("attn_local",) else 0
+    if spec.mixer == "attn" and cfg.sliding_window and not cfg.has_ssm:
+        # archs whose only attention is sliding (none assigned currently)
+        sliding = cfg.sliding_window
+    return AttnSpec(
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, attn_softcap=cfg.attn_softcap,
+        sliding_window=sliding, causal=cfg.causal, mrope=cfg.mrope)
+
+
+def moe_spec(cfg: ModelConfig) -> MoESpec:
+    return MoESpec(n_experts=cfg.moe_experts, top_k=cfg.moe_topk,
+                   d_ff=cfg.moe_d_ff or cfg.d_ff,
+                   capacity_factor=cfg.capacity_factor, act=cfg.act)
+
+
+def ssm_spec(cfg: ModelConfig) -> SSMSpec:
+    return SSMSpec(d_inner=cfg.d_inner, n_heads=cfg.ssm_heads,
+                   headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                   conv_width=cfg.ssm_conv_width, chunk=cfg.ssm_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_mlp(rng, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def _init_group(rng, cfg: ModelConfig) -> Dict:
+    """Parameters for ONE group (the pattern applied once)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    out: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        rng, k_mix, k_ffn = jax.random.split(rng, 3)
+        layer: Dict[str, Any] = {
+            "pre_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if spec.mixer.startswith("attn"):
+            layer["attn"] = init_attn_params(
+                k_mix, cfg.d_model, attn_spec(cfg, spec), dtype)
+        elif spec.mixer == "mamba":
+            layer["mamba"] = init_ssm_params(
+                k_mix, cfg.d_model, ssm_spec(cfg), dtype)
+        if spec.ffn == "mlp":
+            layer["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+            layer["mlp"] = _init_mlp(k_ffn, cfg, dtype)
+        elif spec.ffn == "moe":
+            layer["ffn_norm"] = jnp.ones((cfg.d_model,), dtype)
+            layer["moe"] = init_moe_params(k_ffn, cfg.d_model, moe_spec(cfg),
+                                           dtype)
+        out[f"layer{i}"] = layer
+    return out
+
+
+def init_params(rng, cfg: ModelConfig) -> Dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    rng_embed, rng_blocks, rng_head = jax.random.split(rng, 3)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = (jax.random.normal(
+            rng_embed, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype)
+    # stacked group params via vmap over per-group init
+    group_rngs = jax.random.split(rng_blocks, cfg.n_groups)
+    params["blocks"] = jax.vmap(lambda r: _init_group(r, cfg))(group_rngs)
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        params["unembed"] = (jax.random.normal(
+            rng_head, (cfg.d_model, cfg.vocab_size))
+            * cfg.d_model ** -0.5).astype(dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStructs for the parameter tree — no allocation."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    specs = param_specs(cfg)
+
+    def moe_active_fraction(path_leaf_shape) -> float:
+        return cfg.moe_topk / cfg.moe_experts
+
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = jax.tree_util.keystr(path)
+        if active_only and ("'moe'" in keys) and ("router" not in keys):
+            n = int(n * cfg.moe_topk / cfg.moe_experts)
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _mlp(layer: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    act = ACTIVATIONS[cfg.act]
+    h = act(jnp.einsum("bsd,df->bsf", x, layer["w_gate"].astype(x.dtype)),
+            jnp.einsum("bsd,df->bsf", x, layer["w_up"].astype(x.dtype)))
+    # "tp" pins h to the stationary weight layout in decode_tp mode (no-op
+    # during training — resolves to unconstrained)
+    h = constrain(h, "batch", None, "tp")
+    return jnp.einsum("bsf,fd->bsd", h, layer["w_down"].astype(x.dtype))
+
+
+def _apply_group(cfg: ModelConfig, group_params: Dict, x: jnp.ndarray,
+                 positions: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the pattern once. Returns (x, aux_loss_sum)."""
+    # Re-assert the activation sharding inside the scan body: SPMD
+    # propagation through while loops can otherwise replicate the carry.
+    # With seq_shard the remat stash (the dominant training buffer) also
+    # shards its sequence dim over "model".
+    x = constrain(x, "batch", "model" if cfg.seq_shard else None, None)
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(cfg.pattern):
+        layer = group_params[f"layer{i}"]
+        h = rms_norm(x, layer["pre_norm"], zero_centered=cfg.zero_centered_norm)
+        if spec.mixer.startswith("attn"):
+            mix = attention(layer["attn"], h, attn_spec(cfg, spec),
+                            positions=positions, chunk=cfg.attn_chunk,
+                            unroll=cfg.scan_unroll,
+                            use_pallas=cfg.use_pallas)
+        elif spec.mixer == "mamba":
+            mix = ssm_forward(layer["mamba"], h, ssm_spec(cfg),
+                              unroll=cfg.scan_unroll)
+        else:
+            raise ValueError(spec.mixer)
+        x = x + mix
+        if spec.ffn == "mlp":
+            h = rms_norm(x, layer["ffn_norm"],
+                         zero_centered=cfg.zero_centered_norm)
+            x = x + _mlp(layer["mlp"], h, cfg)
+        elif spec.ffn == "moe":
+            h = rms_norm(x, layer["ffn_norm"],
+                         zero_centered=cfg.zero_centered_norm)
+            out, metrics = moe_ffn(layer["moe"], h, moe_spec(cfg))
+            x = x + out
+            aux = aux + metrics["aux_loss"] + metrics["z_loss"]
+    return x, aux
+
+
+def forward(params: Dict, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B,S,V], aux_loss scalar).
+
+    batch: {"tokens": [B,S] int32} or {"embeddings": [B,S,d]};
+    optional {"positions": [B,S] or [3,B,S] for mrope}.
+    """
+    compute = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(compute)
+    else:
+        x = batch["embeddings"].astype(compute)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute)
+    x = constrain(x, "batch", "model" if cfg.seq_shard else None, None)
+    positions = batch.get("positions")
+
+    body = functools.partial(_apply_group, cfg)
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.nothing_saveable
+                  if cfg.remat_policy == "nothing" else
+                  jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    def scan_fn(carry, group_params):
+        x, aux = carry
+        x, aux_g = body(group_params, x, positions)
+        return (x, aux + aux_g), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params["blocks"],
+        unroll=cfg.n_groups if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"], zero_centered=cfg.zero_centered_norm)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    if cfg.seq_shard:
+        logits = constrain(logits, "batch", "model", None)
+    else:
+        logits = constrain(logits, "batch", None, "model")
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(params, batch, cfg)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode with caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Nested cache: one stacked entry per layer kind per group."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    one_group: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.mixer.startswith("attn"):
+            one_group[f"layer{i}"] = init_kv_cache(
+                batch, max_len, attn_spec(cfg, spec), dtype)
+        elif spec.mixer == "mamba":
+            one_group[f"layer{i}"] = init_ssm_cache(batch, ssm_spec(cfg), dtype)
+    # stack over groups
+    return jax.tree.map(
+        lambda l: jnp.zeros((cfg.n_groups,) + l.shape, l.dtype), one_group)
+
+
+def _decode_group(cfg: ModelConfig, group_params: Dict, group_cache: Dict,
+                  x: jnp.ndarray, pos: jnp.ndarray) -> Tuple[jnp.ndarray, Dict]:
+    new_cache: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.pattern):
+        layer = group_params[f"layer{i}"]
+        h = rms_norm(x, layer["pre_norm"], zero_centered=cfg.zero_centered_norm)
+        if spec.mixer.startswith("attn"):
+            mix, new_cache[f"layer{i}"] = decode_attention(
+                layer["attn"], h, group_cache[f"layer{i}"], pos,
+                attn_spec(cfg, spec))
+        elif spec.mixer == "mamba":
+            mix, new_cache[f"layer{i}"] = decode_ssm(
+                layer["mamba"], h, group_cache[f"layer{i}"], ssm_spec(cfg))
+        x = x + mix
+        if spec.ffn == "mlp":
+            h = rms_norm(x, layer["ffn_norm"],
+                         zero_centered=cfg.zero_centered_norm)
+            x = x + _mlp(layer["mlp"], h, cfg)
+        elif spec.ffn == "moe":
+            h = rms_norm(x, layer["ffn_norm"],
+                         zero_centered=cfg.zero_centered_norm)
+            out, _ = moe_ffn(layer["moe"], h, moe_spec(cfg))
+            x = x + out
+    return x, new_cache
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One serve step. tokens [B] int32 (or embeddings [B,d]); pos scalar.
+    Returns (logits [B,V], new cache)."""
+    compute = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(compute)
+    else:
+        x = tokens[:, None, :].astype(compute)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute)
+    x = constrain(x, "batch", None, None)
+
+    def scan_fn(carry, xs):
+        x = carry
+        group_params, group_cache = xs
+        x = constrain(x, "batch", None, None)
+        x, new_group_cache = _decode_group(cfg, group_params, group_cache,
+                                           x, pos)
+        return x, new_group_cache
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache),
+                                unroll=cfg.n_groups if cfg.scan_unroll else 1)
+    x = rms_norm(x, params["final_norm"], zero_centered=cfg.zero_centered_norm)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], new_cache

@@ -1,0 +1,117 @@
+"""Mixture-of-experts FFN: top-k routing with capacity-bounded dispatch.
+
+GShard/Mesh-TF-style dense formulation — token→expert assignment becomes
+one-hot dispatch/combine tensors contracted with einsums, which is fully
+static and SPMD-shardable: the expert dim of every large intermediate
+([G,S,E,C], [E,G,C,d]) shards over the "model" mesh axis (expert
+parallelism) when the expert count divides it (jamba 16e, qwen3-moe 128e);
+otherwise experts stay replicated and each expert's d_ff shards over
+"model" (grok-1 8e).
+
+The dispatch tensor is built *per top-k slot* (the Mesh-TF formulation):
+slot k's positions continue slot k-1's per-expert occupancy, so the peak
+intermediate is one [G,S,E,C] tensor — never [G,S,K,E,C].
+
+Aux losses: load-balancing (Switch Transformer) + router z-loss (ST-MoE).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden dim
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+
+
+def init_moe_params(rng, d_model: int, spec: MoESpec, dtype) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    E, F = spec.n_experts, spec.d_ff
+    s_in = d_model ** -0.5
+    s_out = F ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (d_model, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, d_model, F)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, d_model, F)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, F, d_model)) * s_out).astype(dtype),
+    }
+
+
+def capacity(tokens_per_group: int, spec: MoESpec) -> int:
+    cap = int(tokens_per_group * spec.top_k * spec.capacity_factor
+              / spec.n_experts)
+    # hardware-aligned and never zero
+    return max(8, -(-cap // 8) * 8)
+
+
+def moe_ffn(params: Dict, x: jnp.ndarray, spec: MoESpec
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [B, S, d] — groups are batch rows (G=B, group size S).
+
+    Returns (output [B,S,d], aux metrics {aux_loss, z_loss, fraction_dropped}).
+    """
+    from .layers import ACTIVATIONS
+
+    G, S, d = x.shape
+    E, K = spec.n_experts, spec.top_k
+    C = capacity(S, spec)
+
+    logits = jnp.einsum(
+        "gsd,de->gse", x.astype(jnp.float32), params["router"])  # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # [G,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)     # renormalize
+
+    # -- per-slot capacity assignment (Mesh-TF): slot k continues the
+    #    per-expert occupancy left by slots < k -------------------------------
+    dispatch = jnp.zeros((G, S, E, C), x.dtype)
+    combine = jnp.zeros((G, S, E, C), x.dtype)
+    base = jnp.zeros((G, E), jnp.int32)
+    kept = jnp.zeros((), jnp.float32)
+    for k in range(K):
+        sel_k = jax.nn.one_hot(expert_idx[..., k], E, dtype=jnp.int32)  # [G,S,E]
+        pos_k = jnp.cumsum(sel_k, axis=1) * sel_k - 1 + base[:, None, :] * sel_k
+        within = (sel_k > 0) & (pos_k < C)                     # [G,S,E]
+        oh = jax.nn.one_hot(jnp.clip(pos_k, 0, C - 1), C, dtype=x.dtype)
+        disp_k = oh * within[..., None].astype(x.dtype)        # [G,S,E,C]
+        dispatch = dispatch + disp_k
+        combine = combine + gate_vals[..., k, None, None].astype(x.dtype) * disp_k
+        base = base + jnp.sum(sel_k, axis=1)
+        kept = kept + jnp.sum(within.astype(jnp.float32))
+
+    # -- expert computation ----------------------------------------------------
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch, x)      # [E,G,C,d]
+    act = ACTIVATIONS[spec.act]
+    h = act(
+        jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"].astype(x.dtype)),
+        jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"].astype(x.dtype)))
+    expert_out = jnp.einsum("egcf,efd->egcd", h,
+                            params["w_down"].astype(x.dtype))  # [E,G,C,d]
+    out = jnp.einsum("gsec,egcd->gsd", combine, expert_out)    # [G,S,d]
+
+    # -- aux losses -----------------------------------------------------------
+    # load balance: E * sum_e (fraction_tokens_e * mean_prob_e)
+    top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))                  # [E]
+    mean_prob = jnp.mean(probs, axis=(0, 1))                   # [E]
+    aux_loss = E * jnp.sum(frac_tokens * mean_prob)
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    dropped = 1.0 - kept / (G * S * K)
+    metrics = {
+        "aux_loss": aux_loss * spec.aux_loss_weight,
+        "z_loss": z_loss * spec.z_loss_weight,
+        "fraction_dropped": dropped,
+    }
+    return out, metrics

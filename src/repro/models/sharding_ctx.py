@@ -1,0 +1,99 @@
+"""Activation-sharding context — constraints the model applies when lowered
+under a production mesh.
+
+XLA's SPMD propagation through ``while`` loops (our group scan) can drop
+the batch sharding of the loop carry and silently replicate activations
+across the data axis (observed: 16× logits/activation blowup on the
+single-pod mesh).  The fix is standard (MaxText does the same): re-assert
+activation shardings *inside* the loop body with
+``with_sharding_constraint``.
+
+The model code stays mesh-agnostic: constraints are expressed as logical
+axes ("batch" / "model" / None) and resolve against whatever mesh the
+launcher installed via ``activation_sharding``; with no context installed
+(unit tests, CPU smoke runs) ``constrain`` is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes: Sequence[str],
+                        model_axis: str = "model",
+                        replicate_batch: bool = False):
+    """``replicate_batch=True`` (decode_tp mode): "batch" constraints
+    resolve to replicated — decode activations are KB-scale and weights are
+    stationary 2-D sharded, so moving activations beats gathering weights.
+    In this mode the logical axes "tp" (full data×model tensor axis) and
+    "tpd" (the data part only) become active: the model pins its decode
+    activations to the weight layout so XLA contracts with activation-sized
+    psums instead of weight gathers; outside decode_tp both resolve to
+    unconstrained."""
+    token = _CTX.set((mesh, tuple(batch_axes), model_axis, replicate_batch))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a logical sharding constraint ("batch" | "model" | None per
+    dim).  Indivisible dims degrade to unconstrained."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes, model_axis, replicate_batch = ctx
+    assert len(logical) == x.ndim, (logical, x.shape)
+    if not replicate_batch and any(n in ("tp", "tpd") for n in logical):
+        # "tp"/"tpd" call sites exist purely for decode_tp mode; outside it
+        # they must not constrain AT ALL (a partial constraint here would
+        # fight the train-mode propagation — observed ~2× compute blowup).
+        return x
+    spec = []
+    for name, dim in zip(logical, x.shape):
+        if name == "batch":
+            if replicate_batch:
+                spec.append(None)
+                continue
+            size = math.prod(mesh.shape[a] for a in batch_axes)
+            if dim % size == 0:
+                spec.append(batch_axes if len(batch_axes) > 1
+                            else batch_axes[0])
+            elif len(batch_axes) > 1 and dim % mesh.shape[batch_axes[-1]] == 0:
+                spec.append(batch_axes[-1])
+            else:
+                spec.append(None)
+        elif name == "model":
+            spec.append(model_axis if dim % mesh.shape[model_axis] == 0
+                        else None)
+        elif name == "tp":          # active only in decode_tp mode
+            if not replicate_batch:
+                spec.append(None)
+                continue
+            axes = tuple(batch_axes) + (model_axis,)
+            size = math.prod(mesh.shape[a] for a in axes)
+            spec.append(axes if dim % size == 0 else None)
+        elif name == "tpd":         # the data part of the tensor axis
+            if not replicate_batch:
+                spec.append(None)
+                continue
+            size = math.prod(mesh.shape[a] for a in batch_axes)
+            if dim % size == 0:
+                spec.append(batch_axes if len(batch_axes) > 1
+                            else batch_axes[0])
+            else:
+                spec.append(None)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

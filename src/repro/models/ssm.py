@@ -1,0 +1,242 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), pure JAX.
+
+The selective state-space layer with scalar-identity A per head:
+
+    h_t = exp(dt_t·A) * h_{t-1} + dt_t * B_t ⊗ x_t          (per head)
+    y_t = C_t · h_t + D * x_t
+
+Training uses the *chunked* SSD algorithm: the sequence is split into
+chunks; within a chunk the quadratic (attention-like) form computes
+token-token interactions, and a lightweight scan over chunk boundaries
+carries the state — matmul-dominant work, matching the paper's formulation
+(this is also what the Pallas kernel tiles; see ``repro.kernels.ssd_scan``).
+Decode is the O(1) recurrence.
+
+TP note (DESIGN.md §6): projections are kept *separate* (z, x, B, C, dt)
+rather than fused as in the reference CUDA implementation.  A fused
+in_proj puts the z|x|B|C|dt boundaries inside one output axis, which never
+aligns with a 16-way model shard; separate matrices let x/z shard by whole
+SSD heads (d_inner = H·P with H % 16 == 0 for both assigned SSM archs)
+while the small B/C/dt streams replicate or shard freely.  The math is
+identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+@dataclass(frozen=True)
+class SSMSpec:
+    d_inner: int                  # expand * d_model
+    n_heads: int                  # d_inner // headdim
+    headdim: int
+    d_state: int                  # N
+    conv_width: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+def init_ssm_params(rng, d_model: int, spec: SSMSpec, dtype) -> Dict:
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(rng, 7)
+    Din, H, N, W = spec.d_inner, spec.n_heads, spec.d_state, spec.conv_width
+    s = d_model ** -0.5
+    dt = jnp.exp(jax.random.uniform(k6, (H,)) *
+                 (jnp.log(spec.dt_max) - jnp.log(spec.dt_min)) +
+                 jnp.log(spec.dt_min))
+    return {
+        "in_z": (jax.random.normal(k1, (d_model, Din)) * s).astype(dtype),
+        "in_x": (jax.random.normal(k2, (d_model, Din)) * s).astype(dtype),
+        "in_B": (jax.random.normal(k3, (d_model, N)) * s).astype(dtype),
+        "in_C": (jax.random.normal(k4, (d_model, N)) * s).astype(dtype),
+        "in_dt": (jax.random.normal(k5, (d_model, H)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(k7, (W, Din))
+                   * (W ** -0.5)).astype(dtype),
+        "conv_B": (jax.random.normal(jax.random.fold_in(k7, 1), (W, N))
+                   * (W ** -0.5)).astype(dtype),
+        "conv_C": (jax.random.normal(jax.random.fold_in(k7, 2), (W, N))
+                   * (W ** -0.5)).astype(dtype),
+        "conv_bias_x": jnp.zeros((Din,), dtype),
+        "conv_bias_B": jnp.zeros((N,), dtype),
+        "conv_bias_C": jnp.zeros((N,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": jnp.ones((Din,), dtype),
+        "out_proj": (jax.random.normal(jax.random.fold_in(k7, 3),
+                                       (Din, d_model))
+                     * (Din ** -0.5)).astype(dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv over [B,S,Ch] with width-W filter [W,Ch].
+    If ``state`` [B, W-1, Ch] is given (decode), uses it as left context and
+    returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (W - 1,) + x.shape[2:], x.dtype)
+        ctx = jnp.concatenate([pad, x], axis=1)
+    else:
+        ctx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(ctx[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(W))
+    out = jax.nn.silu(out + b.astype(x.dtype))
+    new_state = ctx[:, -(W - 1):]
+    return out, new_state
+
+
+def _project(params, x):
+    """x [B,S,d] -> z, xs [B,S,Din], Bc, Cc [B,S,N], dt [B,S,H]."""
+    z = jnp.einsum("bsd,de->bse", x, params["in_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, params["in_x"].astype(x.dtype))
+    Bc = jnp.einsum("bsd,dn->bsn", x, params["in_B"].astype(x.dtype))
+    Cc = jnp.einsum("bsd,dn->bsn", x, params["in_C"].astype(x.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["in_dt"].astype(x.dtype))
+    return z, xs, Bc, Cc, dt
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bc: jnp.ndarray, Cc: jnp.ndarray, D: jnp.ndarray,
+                chunk: int,
+                h0: Optional[jnp.ndarray] = None,
+                unroll: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    xh [B,S,H,P] (P=headdim), dt [B,S,H] (softplus-ed), A [H] (negative),
+    Bc/Cc [B,S,N], D [H].  Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    B_, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+
+    # per-step log decay: a_t = dt_t * A  (negative)
+    a = dt * A[None, None, :]                                  # [B,S,H]
+    xr = xh.reshape(B_, nc, chunk, H, P)
+    ar = a.reshape(B_, nc, chunk, H)
+    dtr = dt.reshape(B_, nc, chunk, H)
+    Br = Bc.reshape(B_, nc, chunk, N)
+    Cr = Cc.reshape(B_, nc, chunk, N)
+
+    # cumulative decay within chunk: L[t] = sum_{i<=t} a_i
+    acs = jnp.cumsum(ar, axis=2)                               # [B,nc,c,H]
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    # scores[t,s] = (C_t · B_s) * exp(acs_t - acs_s) * dt_s  for s <= t
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]       # [B,nc,c,c,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bnck,bnmk->bncm", Cr, Br)                 # C_t · B_s
+    scores = cb[..., None] * decay * dtr[:, :, None, :, :]     # [B,nc,c,c,H]
+    y_intra = jnp.einsum("bncsh,bnshp->bnchp", scores, xr)
+
+    # ---- chunk-boundary states ----
+    # state contribution of chunk j: sum_s exp(acs_end - acs_s) dt_s B_s x_s
+    tail_decay = jnp.exp(acs[:, :, -1:, :] - acs)              # [B,nc,c,H]
+    chunk_state = jnp.einsum("bnsh,bnsk,bnshp->bnhpk",
+                             tail_decay * dtr, Br, xr)         # [B,nc,H,P,N]
+
+    # scan over chunks: h_{j+1} = exp(sum a in chunk j) h_j + chunk_state_j
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                    # [B,nc,H]
+    if h0 is None:
+        h0 = jnp.zeros((B_, H, P, N), xh.dtype)
+
+    def scan_fn(h, inp):
+        cd, cs = inp                                           # [B,H], [B,H,P,N]
+        h_out = h                                              # state BEFORE chunk
+        h_new = cd[..., None, None] * h + cs
+        return h_new, h_out
+
+    cd_swapped = jnp.moveaxis(chunk_decay, 1, 0)               # [nc,B,H]
+    cs_swapped = jnp.moveaxis(chunk_state, 1, 0)               # [nc,B,H,P,N]
+    h_final, h_before = jax.lax.scan(scan_fn, h0, (cd_swapped, cs_swapped),
+                                     unroll=nc if unroll else 1)
+    h_before = jnp.moveaxis(h_before, 0, 1)                    # [B,nc,H,P,N]
+
+    # ---- inter-chunk: y += C_t · (decay_to_t * h_before_chunk) ----
+    head_decay = jnp.exp(acs)                                  # [B,nc,c,H]
+    y_inter = jnp.einsum("bnck,bnch,bnhpk->bnchp",
+                         Cr, head_decay, h_before)
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    y = y + xh * D[None, None, :, None]
+    return y, h_final
+
+
+def ssm_forward(params: Dict, x: jnp.ndarray, spec: SSMSpec,
+                unroll: bool = False) -> jnp.ndarray:
+    """Training / prefill forward. x: [B,S,d] -> [B,S,d]."""
+    H, P = spec.n_heads, spec.headdim
+    z, xs, Bc, Cc, dt = _project(params, x)
+    xs, _ = _causal_conv(xs, params["conv_x"], params["conv_bias_x"])
+    Bc, _ = _causal_conv(Bc, params["conv_B"], params["conv_bias_B"])
+    Cc, _ = _causal_conv(Cc, params["conv_C"], params["conv_bias_C"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                              # [H] negative
+    xh = xs.reshape(*xs.shape[:2], H, P)
+    y, _ = ssd_chunked(xh, dt.astype(x.dtype), A.astype(x.dtype),
+                       Bc, Cc, params["D"].astype(x.dtype), spec.chunk,
+                       unroll=unroll)
+    y = y.reshape(*x.shape[:2], spec.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) recurrent step)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(batch: int, spec: SSMSpec, dtype) -> Dict[str, jnp.ndarray]:
+    H, P, N, W = spec.n_heads, spec.headdim, spec.d_state, spec.conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, spec.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, N), dtype),
+        "ssd": jnp.zeros((batch, H, P, N), dtype),
+    }
+
+
+def decode_ssm(params: Dict, x: jnp.ndarray, cache: Dict, spec: SSMSpec
+               ) -> Tuple[jnp.ndarray, Dict]:
+    """One decode step: x [B,1,d] -> (y [B,1,d], new cache)."""
+    from .sharding_ctx import constrain
+
+    H, P = spec.n_heads, spec.headdim
+    z, xs, Bc, Cc, dt = _project(params, x)
+    # decode_tp: pin the inner-dim activations to the stationary weight
+    # layout so the out_proj contraction psums 2 MB activations instead of
+    # gathering 0.25 GB weights (no-op outside decode_tp mode)
+    z = constrain(z, "batch", None, "tp")
+    xs = constrain(xs, "batch", None, "tp")
+    xs, conv_x = _causal_conv(xs, params["conv_x"], params["conv_bias_x"],
+                              state=cache["conv_x"])
+    Bc, conv_B = _causal_conv(Bc, params["conv_B"], params["conv_bias_B"],
+                              state=cache["conv_B"])
+    Cc, conv_C = _causal_conv(Cc, params["conv_C"], params["conv_bias_C"],
+                              state=cache["conv_C"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,1,H]
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(-1, H, P)                                  # [B,H,P]
+    decay = jnp.exp(dt[:, 0, :] * A[None, :])                  # [B,H]
+    h = cache["ssd"].astype(jnp.float32)
+    h = decay[..., None, None] * h + jnp.einsum(
+        "bh,bk,bhp->bhpk", dt[:, 0, :], Bc[:, 0].astype(jnp.float32),
+        xh.astype(jnp.float32))
+    y = jnp.einsum("bk,bhpk->bhp", Cc[:, 0].astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(-1, 1, spec.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"])
+    y = constrain(y, "batch", None, "tp")
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv_x": conv_x.astype(cache["conv_x"].dtype),
+                 "conv_B": conv_B.astype(cache["conv_B"].dtype),
+                 "conv_C": conv_C.astype(cache["conv_C"].dtype),
+                 "ssd": h.astype(cache["ssd"].dtype)}

@@ -1,0 +1,3 @@
+from .train_loop import Trainer, TrainerConfig
+
+__all__ = ["Trainer", "TrainerConfig"]

@@ -1,0 +1,150 @@
+"""The training runtime: jitted step + DVV-checkpointed state machine.
+
+One ``Trainer`` is one logical training job.  Every ``ckpt_every`` steps it
+persists (params, opt moments, data cursor, RNG fold) through the
+CheckpointManager — whose manifests live in the replicated DVV store — so
+a crash at ANY point resumes bitwise-identically, including after
+divergent manifests from a partitioned control plane (the manager
+reconciles deterministically).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import CheckpointManager
+from ..data import PipelineConfig, SyntheticTokens
+from ..models import ModelConfig, init_params, loss_fn
+from ..optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    log_every: int = 10
+    seed: int = 0
+    mesh_shape: Tuple[int, ...] = (1,)
+
+
+def _flatten_state(params, opt_state) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        key = "p/" + "/".join(str(getattr(k, "key", k)) for k in path)
+        out[key] = np.asarray(leaf)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(opt_state)[0]:
+        key = "o/" + "/".join(str(getattr(k, "key", k)) for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten_state(arrays: Dict[str, np.ndarray], params_like,
+                     opt_like) -> Tuple[Any, Any]:
+    def rebuild(prefix, like):
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path, leaf in flat[0]:
+            key = prefix + "/".join(str(getattr(k, "key", k)) for k in path)
+            arr = arrays[key]
+            leaves.append(jnp.asarray(arr, leaf.dtype).reshape(leaf.shape))
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    return rebuild("p/", params_like), rebuild("o/", opt_like)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 pipe_cfg: PipelineConfig, trainer_cfg: TrainerConfig,
+                 ckpt: CheckpointManager):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.trainer_cfg = trainer_cfg
+        self.ckpt = ckpt
+        self.pipeline = SyntheticTokens(pipe_cfg)
+        self.step = 0
+        self.params = None
+        self.opt_state = None
+        self.metrics_log: List[Dict] = []
+
+        cfg = model_cfg
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+            params, opt_state, om = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            return params, opt_state, {"loss": loss, **metrics, **om}
+
+        self._train_step = train_step
+
+    # -- lifecycle ------------------------------------------------------------
+    def init_fresh(self) -> None:
+        rng = jax.random.key(self.trainer_cfg.seed)
+        self.params = init_params(rng, self.model_cfg)
+        self.opt_state = init_opt_state(self.params, self.opt_cfg)
+        self.step = 0
+        self.pipeline.restore(0)
+
+    def try_restore(self) -> bool:
+        """Restore from the latest manifest; returns True if one existed."""
+        if self.params is None:
+            self.init_fresh()           # build templates for unflatten
+        res = self.ckpt.restore()
+        if res is None:
+            return False
+        self.params, self.opt_state = _unflatten_state(
+            res.arrays, self.params, self.opt_state)
+        self.step = res.manifest.step
+        self.pipeline.restore(res.manifest.data_cursor)
+        return True
+
+    def save(self) -> None:
+        arrays = _flatten_state(self.params, self.opt_state)
+        self.ckpt.save(
+            self.step, arrays, data_cursor=self.pipeline.state(),
+            rng_seed=self.trainer_cfg.seed, rng_fold=self.step,
+            mesh_shape=self.trainer_cfg.mesh_shape)
+
+    # -- run -----------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            crash_at: Optional[int] = None) -> Dict:
+        """Train ``steps`` (default: to total_steps).  ``crash_at`` raises
+        mid-run AFTER that step — the fault-injection hook used by tests
+        and the e2e example."""
+        target = min(self.trainer_cfg.total_steps,
+                     self.step + (steps or self.trainer_cfg.total_steps))
+        t0 = time.time()
+        while self.step < target:
+            batch_np = self.pipeline.next_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            self.params, self.opt_state, metrics = self._train_step(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            if self.step % self.trainer_cfg.log_every == 0 or \
+                    self.step == target:
+                row = {"step": self.step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"])}
+                self.metrics_log.append(row)
+            if self.step % self.trainer_cfg.ckpt_every == 0:
+                self.save()
+            if crash_at is not None and self.step >= crash_at:
+                raise RuntimeError(f"injected crash at step {self.step}")
+        return {"steps": self.step, "wall_s": time.time() - t0,
+                "final_loss": self.metrics_log[-1]["loss"]
+                if self.metrics_log else None}
+
+    def state_fingerprint(self) -> str:
+        """Hash of all params — for bitwise resume assertions."""
+        import hashlib
+        h = hashlib.sha256()
+        for leaf in jax.tree.leaves(self.params):
+            h.update(np.asarray(leaf).tobytes())
+        h.update(str(self.pipeline.state()).encode())
+        return h.hexdigest()[:16]

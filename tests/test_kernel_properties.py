@@ -1,0 +1,130 @@
+"""Property tests for the §4 kernel conditions on DVV update/sync."""
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Tuple
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    DVV, DVV_MECHANISM, downset, sync_conditions_hold,
+    update_conditions_hold_histories,
+)
+from repro.core.dvv import sync as dvv_sync, update as dvv_update
+from repro.store import KVCluster, SimNetwork, Unavailable
+
+NODES = ("a", "b", "c")
+KEY = "k"
+
+
+@st.composite
+def schedules(draw):
+    """(op, node, use_context) sequences over a single key."""
+    n = draw(st.integers(min_value=1, max_value=20))
+    ops = []
+    for _ in range(n):
+        kind = draw(st.sampled_from(["put", "get", "deliver", "ae"]))
+        node = draw(st.sampled_from(NODES))
+        other = draw(st.sampled_from(NODES))
+        use_ctx = draw(st.booleans())
+        ops.append((kind, node, other, use_ctx))
+    return ops
+
+
+@settings(max_examples=150, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(schedules())
+def test_update_conditions_hold_on_every_put(ops):
+    """At every PUT, u = update(S, S_C, C) satisfies the paper's 3 conditions,
+    verified in causal-history space via the semantic function C[[.]]."""
+    cluster = KVCluster(NODES, DVV_MECHANISM, network=SimNetwork(seed=3))
+    contexts: Dict[str, FrozenSet] = {}
+    counter = 0
+    for (kind, node, other, use_ctx) in ops:
+        if kind == "put":
+            counter += 1
+            ctx = contexts.get(node, frozenset()) if use_ctx else frozenset()
+            coord = cluster.nodes[node]
+            S_r = coord.clocks(KEY)
+            # all clocks currently stored anywhere (the global condition)
+            all_clocks = set()
+            for nd in cluster.nodes.values():
+                all_clocks |= nd.clocks(KEY)
+            u = dvv_update(frozenset(ctx), S_r, node)
+            ok = update_conditions_hold_histories(
+                frozenset(c.to_history() for c in ctx),
+                frozenset(c.to_history() for c in all_clocks),
+                u.to_history(),
+            )
+            assert ok, (ctx, S_r, u)
+            # commit through the real protocol so state evolves identically
+            cluster.put(KEY, f"v{counter}", context=ctx, via=node,
+                        coordinator=node)
+        elif kind == "get":
+            try:
+                contexts[node] = cluster.get(KEY, via=node).context
+            except Unavailable:
+                pass
+        elif kind == "deliver":
+            cluster.deliver_replication()
+        elif kind == "ae" and node != other:
+            try:
+                cluster.antientropy(node, other)
+            except Unavailable:
+                pass
+        # the downset invariant must hold at every replica after every step
+        for nd in cluster.nodes.values():
+            assert downset(nd.clocks(KEY))
+
+
+# -- sync conditions on arbitrary (even non-store) DVV antichains ------------
+
+@st.composite
+def dvv_clock(draw):
+    comps = []
+    for r in ("a", "b", "c"):
+        if draw(st.booleans()):
+            m = draw(st.integers(min_value=0, max_value=4))
+            dotted = draw(st.booleans())
+            if dotted:
+                n = m + draw(st.integers(min_value=1, max_value=3))
+                comps.append((r, m, n))
+            elif m > 0:
+                comps.append((r, m, 0))
+    return DVV(tuple(comps))
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.frozensets(dvv_clock(), max_size=4),
+       st.frozensets(dvv_clock(), max_size=4))
+def test_sync_conditions_on_arbitrary_clock_sets(S1, S2):
+    """§4's sync conditions hold for *any* clock sets once reduced to
+    antichains (the store only ever holds antichains)."""
+    from repro.core import antichain
+    S1, S2 = antichain(S1), antichain(S2)
+    S = dvv_sync(S1, S2)
+    assert sync_conditions_hold(S1, S2, S)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dvv_clock(), dvv_clock())
+def test_dvv_order_equals_history_inclusion(x, y):
+    """§5.2: the component-wise order computes exactly history inclusion."""
+    assert x.leq(y) == x.to_history().leq(y.to_history())
+    assert x.concurrent(y) == x.to_history().concurrent(y.to_history())
+
+
+def test_equivalent_nonidentical_representations():
+    """DVV representations are not canonical: (a,2,3) ≡ (a,3) — same
+    history, mutually ≤.  The order must treat them as equal, never as a
+    strict domination (this was a hypothesis-found counterexample against
+    a too-strict reading of the §4 antichain condition)."""
+    dotted = DVV.from_dict({"a": (2, 3)})
+    plain = DVV.from_dict({"a": (3,)})
+    assert dotted.to_history() == plain.to_history()
+    assert dotted.leq(plain) and plain.leq(dotted)
+    assert not dotted.concurrent(plain)
+    # sync over the pair keeps them (equivalence-class duplicates), and the
+    # conditions still hold under the equivalence-aware reading
+    S = dvv_sync(frozenset({dotted}), frozenset({plain}))
+    assert sync_conditions_hold(frozenset({dotted}), frozenset({plain}), S)

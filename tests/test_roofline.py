@@ -1,0 +1,94 @@
+"""Roofline methodology tests: the facts the analysis relies on."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.roofline import (
+    collective_bytes_by_kind, collective_bytes_detailed,
+    correct_promoted_f32, model_flops,
+)
+
+
+def test_cost_analysis_counts_scan_body_once():
+    """The documented XLA behaviour that motivates two-point extrapolation."""
+    def body(x, w):
+        return x @ w, None
+
+    def f_scan(x, ws):
+        return jax.lax.scan(body, x, ws)[0]
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((1, 128, 128), jnp.float32)
+    scan10 = jax.jit(f_scan).lower(x, ws).compile().cost_analysis()["flops"]
+    scan1 = jax.jit(f_scan).lower(x, w1).compile().cost_analysis()["flops"]
+    # body counted once regardless of trip count (± loop-counter flops)
+    assert abs(scan10 - scan1) < 0.01 * scan1, (scan10, scan1)
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = textwrap.dedent("""
+      %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups={}
+      %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%sum
+      %fusion = f32[8,8]{1,0} fusion(%z), kind=kLoop
+      %rs = (f32[32]{0}, f32[32]{0}) reduce-scatter(%a, %b)
+    """)
+    by_kind = collective_bytes_by_kind(hlo)
+    assert by_kind["all-gather"] == 16 * 1024 * 2
+    assert by_kind["all-reduce"] == 256 * 4
+    assert by_kind["reduce-scatter"] == 2 * 32 * 4
+    assert "fusion" not in by_kind
+
+    detailed = collective_bytes_detailed(hlo)
+    assert detailed["all-gather"] == {"bf16": 16 * 1024 * 2}
+    corrected = correct_promoted_f32(detailed)
+    assert corrected["all-reduce"] == 256 * 2   # f32 halved
+    assert corrected["all-gather"] == 16 * 1024 * 2  # bf16 untouched
+
+
+def test_model_flops_moe_counts_active_only():
+    from repro.configs import SHAPES, get_config
+    cfg = get_config("qwen3-moe-30b-a3b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    dense_equiv = 6 * cfg.param_count() * SHAPES["train_4k"].global_batch \
+        * SHAPES["train_4k"].seq_len
+    assert mf < 0.2 * dense_equiv   # ~3.3B active of 30.5B total
+
+
+DRYRUN_SMOKE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from dataclasses import replace
+from repro.configs import get_config, SHAPES
+from repro.launch.mesh import make_mesh
+from repro.launch.dryrun import lower_cell, extrapolated_costs
+mesh = make_mesh((2, 4), ("data", "model"))
+cfg = replace(get_config("granite-8b").smoke(), remat=True)
+shape = replace(SHAPES["train_4k"], seq_len=64, global_batch=4)
+_, compiled, _ = lower_cell(cfg, shape, mesh)
+assert compiled.memory_analysis().temp_size_in_bytes > 0
+costs = extrapolated_costs(cfg, shape, mesh)
+assert costs["flops"] > 0 and costs["bytes"] > 0
+# linearity check: a 2x-deeper model must cost ~2x the per-group part
+deep = replace(cfg, n_layers=2 * cfg.n_layers)
+costs2 = extrapolated_costs(deep, shape, mesh)
+ratio = costs2["flops"] / costs["flops"]
+assert 1.5 < ratio < 2.5, ratio
+print("DRYRUN_SMOKE_OK")
+"""
+
+
+def test_dryrun_machinery_on_small_mesh():
+    """Lower+compile+extrapolate on a 2×4 mesh in a subprocess (the forced
+    device count must not leak into this test process)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SMOKE],
+        capture_output=True, text=True, timeout=480,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=__import__("os").path.dirname(__import__("os").path.dirname(
+            __import__("os").path.abspath(__file__))))
+    assert "DRYRUN_SMOKE_OK" in proc.stdout, proc.stderr[-2000:]

@@ -1,0 +1,87 @@
+"""Integration: the full control-plane state machine around training —
+failure detection → membership update → elastic rescale → checkpoint
+restore → training continues."""
+import pytest
+
+from repro.data import PipelineConfig
+from repro.models import ModelConfig
+from repro.optim import AdamWConfig
+from repro.runtime.simcluster import SimCluster
+from repro.runtime.train_loop import TrainerConfig
+
+
+def tiny():
+    return ModelConfig(
+        name="tiny", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128, remat=False)
+
+
+def make_cluster(tmp_path, n_workers=4, total=40):
+    return SimCluster(
+        n_workers=n_workers,
+        model_cfg=tiny(),
+        opt_cfg=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=total),
+        pipe_cfg=PipelineConfig(vocab_size=128, seq_len=16, global_batch=4),
+        trainer_cfg=TrainerConfig(total_steps=total, ckpt_every=5,
+                                  log_every=10),
+        blob_root=str(tmp_path),
+        mesh_candidates=[((4,), ("data",)), ((2,), ("data",)),
+                         ((1,), ("data",))],
+    )
+
+
+def test_steady_state_trains_to_completion(tmp_path):
+    sim = make_cluster(tmp_path, total=20)
+    for _ in range(25):
+        out = sim.round()
+        if out["step"] >= 20:
+            break
+    assert sim.trainer.step == 20
+    assert sim.rescales == 0
+
+
+def test_worker_death_triggers_rescale_and_training_continues(tmp_path):
+    sim = make_cluster(tmp_path, total=40)
+    for _ in range(5):
+        sim.round()
+    step_before = sim.trainer.step
+    sim.kill("w3")
+    sim.kill("w2")
+    # run enough rounds for detection (dead_threshold=8 intervals) + rescale
+    for _ in range(20):
+        sim.round()
+    assert sim.rescales >= 1
+    assert sim.assignment.mesh_shape == (2,)
+    assert sim.trainer.step > step_before          # training continued
+    assert any("DETECT-DEAD" in e for e in sim.events)
+    assert any("RESCALE" in e for e in sim.events)
+
+
+def test_stalled_worker_detected_as_suspect_then_dead(tmp_path):
+    sim = make_cluster(tmp_path, total=40)
+    for _ in range(4):
+        sim.round()
+    sim.stall("w1")
+    for _ in range(12):
+        sim.round()
+    assert "w1" not in sim.fd.alive(sim.now)
+    view = sim.membership.view()
+    assert "w1" not in view.alive()
+
+
+def test_recovery_rejoins_and_scales_back_up(tmp_path):
+    sim = make_cluster(tmp_path, total=60)
+    for _ in range(3):
+        sim.round()
+    sim.kill("w3")
+    for _ in range(15):
+        sim.round()
+    assert sim.assignment.mesh_shape == (2,)
+    sim.recover("w3")
+    for _ in range(3):
+        sim.round()
+    assert sim.assignment.mesh_shape == (4,)       # scaled back up
+    # training still progresses after the second rescale
+    s = sim.trainer.step
+    sim.round()
+    assert sim.trainer.step >= s

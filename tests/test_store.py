@@ -1,0 +1,128 @@
+"""Replicated store behaviour: protocol, quorums, partitions, anti-entropy."""
+import pytest
+
+from repro.core import ALL_MECHANISMS, DVV_MECHANISM, VV_SERVER_MECHANISM
+from repro.store import KVCluster, SimNetwork, Unavailable
+
+
+def make_cluster(mech="dvv", nodes=("a", "b", "c"), **kw):
+    return KVCluster(nodes, ALL_MECHANISMS[mech], **kw)
+
+
+def test_put_get_roundtrip():
+    c = make_cluster()
+    ack = c.put("k", "v0", via="a")
+    c.deliver_replication()
+    got = c.get("k", via="b", quorum=3)
+    assert got.values == ("v0",)
+    assert got.siblings == 1
+
+
+def test_concurrent_puts_same_coordinator_kept_as_siblings():
+    """The paper's headline capability: same-server concurrency survives."""
+    c = make_cluster("dvv", nodes=("a", "b"))
+    c.put("k", "v", context=frozenset(), coordinator="b")
+    c.put("k", "w", context=frozenset(), coordinator="b")
+    got = c.get("k", via="b")
+    assert set(got.values) == {"v", "w"}
+    assert got.siblings == 2
+
+
+def test_vv_server_same_coordinator_loses_sibling():
+    """And the Dynamo baseline drops one of them (Fig. 3)."""
+    c = make_cluster("vv_server", nodes=("a", "b"))
+    c.put("k", "v", context=frozenset(), coordinator="b")
+    c.put("k", "w", context=frozenset(), coordinator="b")
+    got = c.get("k", via="b")
+    assert got.values == ("w",)   # v silently lost
+
+
+def test_context_supersedes_siblings():
+    c = make_cluster("dvv", nodes=("a", "b"))
+    c.put("k", "v", coordinator="b")
+    c.put("k", "w", coordinator="b")
+    got = c.get("k", via="b")
+    assert got.siblings == 2
+    # client resolves the conflict: put with full context
+    c.put("k", "merged", context=got.context, coordinator="b")
+    got2 = c.get("k", via="b")
+    assert got2.values == ("merged",)
+    assert got2.siblings == 1
+
+
+def test_read_own_write_through_any_replica_after_replication():
+    c = make_cluster("dvv")
+    ack = c.put("k", "v1", via="a")
+    assert c.deliver_replication() > 0
+    for n in ("a", "b", "c"):
+        assert c.get("k", via=n).values == ("v1",)
+
+
+def test_partition_then_heal_preserves_both_writes():
+    """Divergence under partition; anti-entropy reconciles as siblings."""
+    net = SimNetwork(seed=1)
+    c = KVCluster(("a", "b"), DVV_MECHANISM, network=net)
+    net.partition({"a"}, {"b"})
+    c.put("k", "left", coordinator="a", via="a")
+    c.put("k", "right", coordinator="b", via="b")
+    net.heal()
+    c.antientropy_round()
+    got = c.get("k", via="a", quorum=1)
+    assert set(got.values) == {"left", "right"}   # nothing lost
+    # resolve
+    c.put("k", "resolved", context=got.context, coordinator="a")
+    c.antientropy_round()
+    assert c.get("k", via="b").values == ("resolved",)
+
+
+def test_down_node_and_recovery():
+    net = SimNetwork(seed=2)
+    c = KVCluster(("a", "b", "c"), DVV_MECHANISM, network=net)
+    net.fail_node("c")
+    c.put("k", "v", via="a")
+    with pytest.raises(Unavailable):
+        c.get("k", via="c")
+    net.recover_node("c")
+    c.deliver_replication()   # queued replication flows after recovery
+    assert c.get("k", via="c", quorum=3).values == ("v",)
+
+
+def test_write_quorum_unavailable_raises():
+    net = SimNetwork(seed=3)
+    c = KVCluster(("a", "b", "c"), DVV_MECHANISM, network=net,
+                  write_quorum=3)
+    net.partition({"a"}, {"b", "c"})
+    with pytest.raises(Unavailable):
+        c.put("k", "v", via="a")
+
+
+def test_antientropy_converges_all_replicas():
+    c = make_cluster("dvv", nodes=("a", "b", "c", "d"))
+    for i in range(5):
+        c.put(f"k{i}", f"v{i}", coordinator="a", via="a")
+    # no replication delivery at all — rely on anti-entropy only
+    c.network.queue.clear()
+    c.antientropy_round()
+    for n in ("b", "c", "d"):
+        for i in range(5):
+            assert c.get(f"k{i}", via=n).values == (f"v{i}",)
+
+
+def test_replication_factor_subset_of_nodes():
+    c = KVCluster([f"n{i}" for i in range(10)], DVV_MECHANISM,
+                  replication=3)
+    reps = c.replicas_for("some-key")
+    assert len(reps) == 3
+    c.put("some-key", "v", via="n0")
+    c.deliver_replication()
+    stored = [n for n, node in c.nodes.items() if node.versions("some-key")]
+    assert set(stored) == set(reps)
+
+
+def test_lww_mechanism_single_version_always():
+    c = make_cluster("wallclock_lww", nodes=("a", "b"))
+    c.put("k", "v", coordinator="b", wall_time=1.0, client_id="c1")
+    c.put("k", "w", coordinator="b", wall_time=2.0, client_id="c2")
+    got = c.get("k", via="b")
+    assert got.values == ("w",)  # concurrent v lost — expected for LWW
+    assert got.siblings == 1
