@@ -1,0 +1,25 @@
+# Single gate every PR runs. `make test` is the tier-1 command from
+# ROADMAP.md; `bench-smoke` exercises the benchmark harness at toy sizes;
+# `lint` is a dependency-free syntax/bytecode pass (the container has no
+# flake8/ruff baked in).
+
+PY := python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke bench lint check
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
+	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
+
+bench:
+	$(PY) -m benchmarks.run
+
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	$(PY) -m pyflakes src tests benchmarks 2>/dev/null || true
+
+check: lint test

@@ -68,6 +68,73 @@ def encode_batch(clocks: Sequence[DVV], universe: Sequence[str]):
 
 
 # ---------------------------------------------------------------------------
+# Numpy twins of the clock algebra — used by the resident packed store
+# (store/packed.py) for per-key control-plane operations where a device
+# dispatch per PUT would dominate.  Semantics identical to the jnp versions
+# below; both are conformance-tested against the pure-Python DVV objects.
+# ---------------------------------------------------------------------------
+
+def leq_np(vx: np.ndarray, ix: np.ndarray, nx: np.ndarray,
+           vy: np.ndarray, iy: np.ndarray, ny: np.ndarray) -> np.ndarray:
+    """history(x) ⊆ history(y), batched over leading dims (numpy)."""
+    R = vx.shape[-1]
+    if R == 0:
+        # Empty replica universe: all histories are empty, hence equal.
+        # (No dot can exist — a dot names a replica.)
+        return np.ones(np.broadcast(np.asarray(ix), np.asarray(iy)).shape,
+                       bool)
+    ar = np.arange(R, dtype=np.int32)
+    iy_b = np.asarray(iy)[..., None]
+    ny_b = np.asarray(ny)[..., None]
+    dot_extends = (iy_b == ar) & (vx == ny_b) & (vx == vy + 1)
+    range_ok = np.all((vx <= vy) | dot_extends, axis=-1)
+
+    has_dot = np.asarray(ix) != NO_DOT
+    ix_safe = np.clip(ix, 0, R - 1)
+    vy_at_ix = np.take_along_axis(
+        np.asarray(vy), np.asarray(ix_safe)[..., None], axis=-1)[..., 0]
+    dot_ok = (nx <= vy_at_ix) | ((iy == ix) & (nx == ny))
+    dot_ok = np.where(has_dot, dot_ok, True)
+    return range_ok & dot_ok
+
+
+def sync_mask_np(vvs: np.ndarray, dot_ids: np.ndarray, dot_ns: np.ndarray,
+                 valid: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``sync_mask`` (below): survival of a combined clock set.
+
+    vvs [..., K, R]; dot_ids/dot_ns/valid [..., K].  Returns bool [..., K].
+    """
+    K = vvs.shape[-2]
+    vx = vvs[..., :, None, :]
+    vy = vvs[..., None, :, :]
+    ix = dot_ids[..., :, None]
+    iy = dot_ids[..., None, :]
+    nx = dot_ns[..., :, None]
+    ny = dot_ns[..., None, :]
+    le = leq_np(vx, ix, nx, vy, iy, ny)
+    ge = leq_np(vy, iy, ny, vx, ix, nx)
+    strictly_below = le & ~ge
+    equal = le & ge
+    idx = np.arange(K, dtype=np.int32)
+    dup_earlier = equal & (idx[..., None, :] < idx[..., :, None])
+    other_valid = valid[..., None, :]
+    dominated = np.any((strictly_below | dup_earlier) & other_valid, axis=-1)
+    return valid & ~dominated
+
+
+def effective_ceil_np(vvs: np.ndarray, dot_ids: np.ndarray,
+                      dot_ns: np.ndarray, r_index: int) -> int:
+    """⌈S⌉_r over a clock set given as arrays: max of vv[:, r] and any dot at r."""
+    if vvs.shape[0] == 0:
+        return 0
+    top = int(vvs[:, r_index].max(initial=0))
+    at_r = dot_ids == r_index
+    if at_r.any():
+        top = max(top, int(dot_ns[at_r].max(initial=0)))
+    return top
+
+
+# ---------------------------------------------------------------------------
 # Vectorized clock algebra (jnp).  All functions are jit/vmap friendly and
 # operate on batches: vv [..., R], dot_id [...], dot_n [...].
 # ---------------------------------------------------------------------------

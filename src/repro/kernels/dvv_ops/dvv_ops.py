@@ -50,6 +50,92 @@ def _leq_kernel(vx_ref, ix_ref, nx_ref, vy_ref, iy_ref, ny_ref, out_ref):
     out_ref[...] = ok.astype(jnp.int8)
 
 
+def _sync_mask_kernel(vv_ref, id_ref, n_ref, valid_ref, out_ref):
+    """Fused pairwise dominance + survival for one block of keys.
+
+    vv_ref    : int32[K, BN, Rp]  — K version slots per key, keys on sublanes
+    id/n/valid: int32[K, BN, 1]
+    out_ref   : int8 [K, BN, 1]   — survival mask
+
+    The K axis is a *static* Python loop (K = max versions per key, small);
+    every op inside is a 2-D [BN, Rp] VPU op.  Dominance of x by y is the
+    same masked-lane-sum formulation as ``_leq_kernel``; survival folds the
+    K×K sweep into one kernel so bulk anti-entropy is a single launch.
+    """
+    K, BN, Rp = vv_ref.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (BN, Rp), 1)
+
+    def leq(vx, ix, nx, vy, iy, ny):
+        dot_extends = (lane == iy) & (vx == ny) & (vx == vy + 1)
+        range_ok = jnp.all((vx <= vy) | dot_extends, axis=1, keepdims=True)
+        vy_at_ix = jnp.sum(jnp.where(lane == ix, vy, 0), axis=1,
+                           keepdims=True)
+        dot_ok = (nx <= vy_at_ix) | ((iy == ix) & (nx == ny))
+        return range_ok & jnp.where(ix != NO_DOT, dot_ok, True)
+
+    for xk in range(K):
+        vx, ix, nx = vv_ref[xk], id_ref[xk], n_ref[xk]
+        x_valid = valid_ref[xk] != 0
+        dominated = jnp.zeros((BN, 1), dtype=jnp.bool_)
+        for yk in range(K):
+            if yk == xk:
+                continue
+            vy, iy, ny = vv_ref[yk], id_ref[yk], n_ref[yk]
+            y_valid = valid_ref[yk] != 0
+            le = leq(vx, ix, nx, vy, iy, ny)
+            ge = leq(vy, iy, ny, vx, ix, nx)
+            kill = le & ~ge                       # strictly dominated
+            if yk < xk:
+                kill = kill | (le & ge)           # duplicate: keep earliest
+            dominated = dominated | (kill & y_valid)
+        out_ref[xk] = (x_valid & ~dominated).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dvv_sync_mask_pallas(vvs, dot_ids, dot_ns, valid, *,
+                         block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Which clocks of each key's combined set survive sync — one launch.
+
+    vvs: int32[N, K, R]; dot_ids/dot_ns: int32[N, K]; valid: bool[N, K].
+    Returns bool[N, K].  Semantics identical to ``core.batched.sync_mask``.
+
+    Layout: keys ride the sublane axis (N blocked), the replica universe is
+    padded to the 128-lane axis, and the K version slots become the leading
+    (static-loop) axis so every in-kernel op is a 2-D tile.
+    """
+    N, K, R = vvs.shape
+    if N == 0 or K == 0:
+        return jnp.zeros((N, K), bool)
+    block = min(block, max(8, N))
+    Rp = max(LANES, ((R + LANES - 1) // LANES) * LANES)
+    Np = ((N + block - 1) // block) * block
+
+    vvs_t = jnp.pad(vvs, ((0, Np - N), (0, 0), (0, Rp - R))
+                    ).transpose(1, 0, 2)                       # [K, Np, Rp]
+
+    def col(a, fill=0):
+        return jnp.pad(a, ((0, Np - N), (0, 0)),
+                       constant_values=fill).T[..., None]      # [K, Np, 1]
+
+    args = (vvs_t, col(dot_ids, NO_DOT), col(dot_ns),
+            col(valid.astype(jnp.int32)))
+    grid = (Np // block,)
+    out = pl.pallas_call(
+        _sync_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K, block, Rp), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, block, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, block, 1), lambda i: (0, i, 0)),
+            pl.BlockSpec((K, block, 1), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((K, block, 1), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, Np, 1), jnp.int8),
+        interpret=interpret,
+    )(*args)
+    return out[:, :N, 0].T.astype(bool)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def dvv_leq_pallas(vx, ix, nx, vy, iy, ny, *, block: int = DEFAULT_BLOCK,
                    interpret: bool = True):

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .dvv_ops import dvv_leq_pallas
+from .dvv_ops import dvv_leq_pallas, dvv_sync_mask_pallas
 
 
 def _interpret() -> bool:
@@ -18,6 +18,17 @@ def _interpret() -> bool:
 def dvv_leq(vx, ix, nx, vy, iy, ny):
     """Batched history-inclusion: bool[N]."""
     return dvv_leq_pallas(vx, ix, nx, vy, iy, ny, interpret=_interpret())
+
+
+def dvv_sync_mask(vvs, dot_ids, dot_ns, valid):
+    """Fused per-key survival sweep: bool[N, K] (see dvv_sync_mask_pallas).
+
+    Drop-in for ``core.batched.sync_mask`` — this is the ``mask_fn`` the
+    packed store's bulk anti-entropy hands its grouped clock tensor to.
+    """
+    return dvv_sync_mask_pallas(jnp.asarray(vvs), jnp.asarray(dot_ids),
+                                jnp.asarray(dot_ns), jnp.asarray(valid),
+                                interpret=_interpret())
 
 
 def dvv_dominates(vx, ix, nx, vy, iy, ny):

@@ -127,7 +127,9 @@ def extrapolated_costs(cfg, shape, mesh, mode: str = "train") -> Dict[str, Any]:
     """
     from dataclasses import replace
 
-    from .roofline import collective_bytes_detailed, correct_promoted_f32
+    from .roofline import (
+        collective_bytes_detailed, correct_promoted_f32, cost_analysis_dict,
+    )
 
     L = len(cfg.pattern)
     points = []
@@ -136,7 +138,7 @@ def extrapolated_costs(cfg, shape, mesh, mode: str = "train") -> Dict[str, Any]:
                         scan_unroll=True)
         _, compiled, _ = lower_cell(small, shape, mesh, donate=False,
                                     mode=mode)
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         detailed = collective_bytes_detailed(compiled.as_text())
         if cfg.param_dtype == "bfloat16":
             # undo the XLA:CPU bf16->f32 promotion (see roofline.py)

@@ -19,6 +19,18 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jaxlibs return a one-element list of dicts (one per computation);
+    newer ones return the dict directly.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
 PEAK_FLOPS = 197e12     # bf16 / chip
 HBM_BW = 819e9          # bytes/s / chip
 LINK_BW = 50e9          # bytes/s / link (ICI)

@@ -1,6 +1,7 @@
 """Replicated key-value store (paper §4.1) over a simulated network."""
 from .cluster import GetResult, KVCluster, PutAck
 from .network import SimNetwork, Unavailable
+from .packed import PackedPayload, PackedVersionStore
 from .replica import ReplicaNode
 from .version import Version, clocks_of, sync_versions, values_of
 
@@ -8,4 +9,5 @@ __all__ = [
     "KVCluster", "GetResult", "PutAck",
     "SimNetwork", "Unavailable",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
+    "PackedVersionStore", "PackedPayload",
 ]

@@ -1,113 +1,97 @@
 """Bulk anti-entropy: the batched/Pallas DVV path for large key ranges.
 
-Object-level anti-entropy (``ReplicaNode.receive_antientropy``) walks
-Python clocks key by key — fine for control-plane traffic, hopeless for
-millions of keys.  This module vectorizes the dominance sweep: both sides'
-version sets are array-encoded (``core.batched``), a single
-``sync_mask`` evaluation decides every version's survival, and only the
-surviving versions are materialized back into Python objects.
+With ``PackedVersionStore`` as the resident representation the steady-state
+round is arrays end to end: the sender slices its slot arrays into a
+``PackedPayload`` (zero decode), the receiver remaps replica columns with
+one gather, groups rows per key with one stable sort, evaluates survival in
+one ``sync_mask`` call — the jnp reference or the fused Pallas kernel
+(``kernels.dvv_ops.dvv_sync_mask``, pairwise K×K dominance + survival in a
+single ``pallas_call``) — and writes the surviving rows back.  No per-key
+``DVV`` object is encoded or decoded anywhere on that path.
 
-The jnp reference path and the Pallas kernel (`kernels.dvv_ops`) share the
-encoding; `use_kernel=True` routes the pairwise dominance through
-``dvv_leq`` (interpret-mode on CPU).  Both are tested equal to the
-object-level result (`tests/test_bulk_antientropy.py`).
+The object-level entry points (``bulk_sync`` on dicts of ``Version``s) are
+kept for control-plane callers and for conformance testing against
+``ReplicaNode``'s object backend; they pay the boundary codec once on the
+way in and once on the way out.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, List, Sequence, Tuple
+from typing import Dict, FrozenSet, Union
 
-import jax.numpy as jnp
-import numpy as np
-
-from ..core import batched as B
-from ..core.dvv import DVV
-from .replica import ReplicaNode
+from .packed import PackedPayload, PackedVersionStore
+from .replica import PackedBackend, ReplicaNode, _as_object_payload
 from .version import Version
 
 
-def _universe(versions_by_key: Dict[str, List[Version]]) -> List[str]:
-    ids = set()
-    for versions in versions_by_key.values():
-        for v in versions:
-            ids |= v.clock.ids()
-    return sorted(ids)
+def _mask_fn(use_kernel: bool):
+    if not use_kernel:
+        return None                      # numpy/jnp reference inside packed
+    from ..kernels.dvv_ops import dvv_sync_mask
+    return dvv_sync_mask
+
+
+def bulk_receive_antientropy(node: ReplicaNode,
+                             payload: Union[PackedPayload,
+                                            Dict[str, FrozenSet[Version]]],
+                             use_kernel: bool = False) -> int:
+    """Apply a bulk anti-entropy payload to ``node``; returns #keys changed.
+
+    Packed node + packed payload: single-launch array path (optionally the
+    fused Pallas kernel).  Object payloads are encoded at the boundary.
+    Object-backend DVV nodes still take the batched sweep (the whole point
+    of this entry point); only non-DVV mechanisms fall back to the per-key
+    object walk, as their clocks have no array encoding.
+    """
+    backend = node.backend
+    if isinstance(backend, PackedBackend):
+        if isinstance(payload, PackedPayload):
+            return backend.receive_antientropy(
+                payload, mask_fn=_mask_fn(use_kernel))
+        # object payload at the boundary: encode once into a staging store,
+        # then take the array path
+        staged = _stage_object_payload(payload)
+        return backend.receive_antientropy(
+            staged.payload(), mask_fn=_mask_fn(use_kernel))
+    if node.mechanism.name == "dvv":
+        payload_obj = _as_object_payload(payload)
+        local = {k: node.versions(k) for k in payload_obj}
+        new_sets = bulk_sync(local, payload_obj, use_kernel=use_kernel)
+        changed = 0
+        for k, versions in new_sets.items():
+            if versions != node.versions(k):
+                changed += 1
+            backend.store[k] = versions
+        return changed
+    return backend.receive_antientropy(payload)
+
+
+def _stage_object_payload(payload: Dict[str, FrozenSet[Version]]
+                          ) -> PackedVersionStore:
+    """Boundary codec: object versions → a throwaway packed store.
+
+    Staging goes through ``sync_key`` so each key's set is reduced to its
+    maximal antichain — arbitrary input dicts may contain internally
+    dominated versions (protocol stores never do).
+    """
+    staged = PackedVersionStore()
+    for k in sorted(payload):
+        staged.sync_key_objects(k, payload[k])
+    return staged
 
 
 def bulk_sync(local: Dict[str, FrozenSet[Version]],
               incoming: Dict[str, FrozenSet[Version]],
               use_kernel: bool = False) -> Dict[str, FrozenSet[Version]]:
-    """sync() per key, evaluated as one batched dominance sweep.
+    """Object-level sync() per key, evaluated as one batched sweep.
 
     Returns the new version sets for every key in ``incoming`` ∪ ``local``.
+    Both sides pay the boundary codec (this entry point exists for
+    control-plane callers and conformance tests); resident stores use
+    ``bulk_receive_antientropy`` with packed payloads instead.
     """
-    keys = sorted(set(local) | set(incoming))
-    merged: Dict[str, List[Version]] = {
-        k: sorted(set(local.get(k, frozenset()))
-                  | set(incoming.get(k, frozenset())),
-                  key=lambda v: (repr(v.clock), repr(v.value)))
-        for k in keys
-    }
-    if not keys:
+    if not local and not incoming:
         return {}
-    universe = _universe(merged)
-    K = max(len(vs) for vs in merged.values())
-    R = max(len(universe), 1)
-
-    vvs = np.zeros((len(keys), K, R), np.int32)
-    dids = np.full((len(keys), K), B.NO_DOT, np.int32)
-    dns = np.zeros((len(keys), K), np.int32)
-    valid = np.zeros((len(keys), K), bool)
-    for i, k in enumerate(keys):
-        for j, v in enumerate(merged[k]):
-            vvs[i, j], dids[i, j], dns[i, j] = B.encode(v.clock, universe)
-            valid[i, j] = True
-
-    if use_kernel:
-        from ..kernels.dvv_ops import dvv_leq
-
-        # pairwise strict-domination via two kernel sweeps over flattened
-        # (key, x, y) pairs
-        N, Kk, _ = vvs.shape
-        vx = np.repeat(vvs, Kk, axis=1).reshape(N * Kk * Kk, R)
-        ix = np.repeat(dids, Kk, axis=1).reshape(-1)
-        nx = np.repeat(dns, Kk, axis=1).reshape(-1)
-        vy = np.tile(vvs, (1, Kk, 1)).reshape(N * Kk * Kk, R)
-        iy = np.tile(dids, (1, Kk)).reshape(-1)
-        ny = np.tile(dns, (1, Kk)).reshape(-1)
-        le = np.asarray(dvv_leq(*map(jnp.asarray, (vx, ix, nx, vy, iy, ny))))
-        ge = np.asarray(dvv_leq(*map(jnp.asarray, (vy, iy, ny, vx, ix, nx))))
-        le = le.reshape(N, Kk, Kk)
-        ge = ge.reshape(N, Kk, Kk)
-        strictly_below = le & ~ge
-        idx = np.arange(Kk)
-        dup = (le & ge) & (idx[None, None, :] < idx[None, :, None])
-        other_valid = valid[:, None, :]
-        dominated = ((strictly_below | dup) & other_valid).any(axis=-1)
-        mask = valid & ~dominated
-    else:
-        mask = np.asarray(B.sync_mask(
-            jnp.asarray(vvs), jnp.asarray(dids), jnp.asarray(dns),
-            jnp.asarray(valid)))
-
-    out: Dict[str, FrozenSet[Version]] = {}
-    for i, k in enumerate(keys):
-        out[k] = frozenset(
-            v for j, v in enumerate(merged[k]) if mask[i, j])
-    return out
-
-
-def bulk_receive_antientropy(node: ReplicaNode,
-                             payload: Dict[str, FrozenSet[Version]],
-                             use_kernel: bool = False) -> int:
-    """Apply a bulk anti-entropy payload to ``node``; returns #keys updated.
-
-    Only valid for DVV-mechanism nodes (the array encoding is DVV-specific).
-    """
-    local = {k: node.versions(k) for k in payload}
-    new_sets = bulk_sync(local, payload, use_kernel=use_kernel)
-    changed = 0
-    for k, versions in new_sets.items():
-        if versions != node.versions(k):
-            changed += 1
-        node.store[k] = versions
-    return changed
+    staged = _stage_object_payload(local)
+    staged.apply_payload(_stage_object_payload(incoming).payload(),
+                         mask_fn=_mask_fn(use_kernel))
+    return {k: staged.versions(k) for k in staged.keys}

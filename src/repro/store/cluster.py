@@ -49,12 +49,16 @@ class KVCluster:
     def __init__(self, node_ids: Sequence[str], mechanism: Mechanism, *,
                  replication: Optional[int] = None,
                  read_quorum: int = 1, write_quorum: int = 1,
-                 network: Optional[SimNetwork] = None, seed: int = 0):
+                 network: Optional[SimNetwork] = None, seed: int = 0,
+                 packed: Optional[bool] = None):
         if not node_ids:
             raise ValueError("need at least one node")
         self.mechanism = mechanism
+        # packed=None: array-resident clocks for DVV, objects otherwise
+        # (ReplicaNode decides); packed=False forces the object backend —
+        # the conformance reference for the packed store.
         self.nodes: Dict[str, ReplicaNode] = {
-            n: ReplicaNode(n, mechanism) for n in node_ids}
+            n: ReplicaNode(n, mechanism, packed=packed) for n in node_ids}
         self.replication = replication or len(node_ids)
         self.read_quorum = read_quorum
         self.write_quorum = write_quorum

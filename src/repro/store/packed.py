@@ -1,0 +1,535 @@
+"""Array-resident version store: packed int32 clocks as the source of truth.
+
+``ReplicaNode`` historically kept per-key version sets as Python ``DVV``
+objects and re-encoded them to arrays on every bulk anti-entropy round — an
+O(keys) object-walk tax on the hot path.  ``PackedVersionStore`` inverts
+that: the structure-of-arrays encoding of ``core.batched`` *is* the resident
+representation, and object clocks exist only at the client API edge
+(GET contexts, PUT acks).  See DESIGN.md §3.4.
+
+Layout (structure of arrays over "slots"; one slot = one stored version):
+
+    vv      : int32[cap, R]  — per-replica contiguous ranges 1..m
+    dot_id  : int32[cap]     — replica column of the single dot (−1 if none)
+    dot_n   : int32[cap]     — the dot's counter (0 if none)
+    key_ix  : int32[cap]     — interned key of the slot
+    valid   : bool[cap]      — live/dead (dead slots are reclaimed by compact)
+    values  : list[Any]      — the opaque payloads, aligned with slots
+
+The replica universe is *dynamic*: replica ids are interned on first sight
+and the ``vv`` matrix grows columns in place (zero-fill is exact — absent
+ids have empty ranges).  Capacity grows by doubling; ``compact()`` drops
+dead slots when they outnumber the live ones.
+
+Anti-entropy ships ``PackedPayload`` — the same arrays plus the sender's
+replica/key interning tables — so a full round is: one column remap
+(vectorized gather), one grouped scatter, one ``sync_mask`` evaluation
+(jnp or the fused Pallas kernel), one masked write-back.  No per-key DVV
+object is created anywhere on that path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import batched as B
+from ..core.dvv import DVV
+from .version import Version
+
+NO_DOT = B.NO_DOT
+
+_INITIAL_SLOTS = 64
+_INITIAL_REPLICAS = 4
+
+
+@dataclass
+class PackedPayload:
+    """A bulk anti-entropy transfer: packed clocks + the sender's tables.
+
+    ``key_ix`` indexes into ``keys``; ``vv`` columns follow ``replica_ids``.
+    The receiver remaps columns into its own universe with one gather.
+    """
+
+    replica_ids: Tuple[str, ...]
+    keys: Tuple[str, ...]
+    vv: np.ndarray          # int32[M, R]
+    dot_id: np.ndarray      # int32[M]
+    dot_n: np.ndarray       # int32[M]
+    key_ix: np.ndarray      # int32[M]
+    values: Tuple[Any, ...]
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, PackedPayload):
+            return NotImplemented
+        return (self.replica_ids == other.replica_ids
+                and self.keys == other.keys
+                and np.array_equal(self.vv, other.vv)
+                and np.array_equal(self.dot_id, other.dot_id)
+                and np.array_equal(self.dot_n, other.dot_n)
+                and np.array_equal(self.key_ix, other.key_ix)
+                and self.values == other.values)
+
+    def __len__(self) -> int:
+        return int(self.vv.shape[0])
+
+
+class PackedVersionStore:
+    """The resident packed store.  All mutation is numpy; bulk merges hand
+    one [N, K, R] tensor to ``core.batched.sync_mask`` or the fused Pallas
+    kernel (``kernels.dvv_ops.dvv_sync_mask``)."""
+
+    def __init__(self) -> None:
+        self.vv = np.zeros((_INITIAL_SLOTS, _INITIAL_REPLICAS), np.int32)
+        self.dot_id = np.full(_INITIAL_SLOTS, NO_DOT, np.int32)
+        self.dot_n = np.zeros(_INITIAL_SLOTS, np.int32)
+        self.key_ix = np.full(_INITIAL_SLOTS, -1, np.int32)
+        self.valid = np.zeros(_INITIAL_SLOTS, bool)
+        self.values: List[Any] = [None] * _INITIAL_SLOTS
+        self.n_slots = 0                 # high-water mark
+        self.n_dead = 0
+        self.replica_ids: List[str] = []
+        self._replica_index: Dict[str, int] = {}
+        self.keys: List[str] = []
+        self._key_index: Dict[str, int] = {}
+        self._slots_by_key: Dict[int, List[int]] = {}
+
+    # -- interning / growth ------------------------------------------------
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.replica_ids)
+
+    def intern_replica(self, r: str) -> int:
+        ix = self._replica_index.get(r)
+        if ix is None:
+            ix = len(self.replica_ids)
+            self.replica_ids.append(r)
+            self._replica_index[r] = ix
+            if ix >= self.vv.shape[1]:
+                grow = max(self.vv.shape[1], 4)
+                self.vv = np.pad(self.vv, ((0, 0), (0, grow)))
+        return ix
+
+    def intern_key(self, k: str) -> int:
+        ix = self._key_index.get(k)
+        if ix is None:
+            ix = len(self.keys)
+            self.keys.append(k)
+            self._key_index[k] = ix
+            self._slots_by_key[ix] = []
+        return ix
+
+    def _ensure_capacity(self, extra: int) -> None:
+        need = self.n_slots + extra
+        cap = self.vv.shape[0]
+        if need <= cap:
+            return
+        new_cap = max(need, 2 * cap)
+        pad = new_cap - cap
+        self.vv = np.pad(self.vv, ((0, pad), (0, 0)))
+        self.dot_id = np.pad(self.dot_id, (0, pad), constant_values=NO_DOT)
+        self.dot_n = np.pad(self.dot_n, (0, pad))
+        self.key_ix = np.pad(self.key_ix, (0, pad), constant_values=-1)
+        self.valid = np.pad(self.valid, (0, pad))
+        self.values.extend([None] * pad)
+
+    def compact(self, *, force: bool = False) -> None:
+        """Reclaim dead slots (stable order) when they outnumber live ones."""
+        live = self.n_slots - self.n_dead   # both counters are maintained
+        if not force and self.n_dead <= max(live, _INITIAL_SLOTS):
+            return
+        keep = np.flatnonzero(self.valid[: self.n_slots])
+        n = len(keep)
+        self.vv[:n] = self.vv[keep]
+        self.dot_id[:n] = self.dot_id[keep]
+        self.dot_n[:n] = self.dot_n[keep]
+        self.key_ix[:n] = self.key_ix[keep]
+        self.values[:n] = [self.values[s] for s in keep]
+        self.valid[:n] = True
+        self.valid[n:] = False
+        self.key_ix[n:] = -1
+        self.values[n:] = [None] * (len(self.values) - n)
+        self.n_slots = n
+        self.n_dead = 0
+        remap = {int(old): new for new, old in enumerate(keep)}
+        for kix, slots in self._slots_by_key.items():
+            self._slots_by_key[kix] = [remap[s] for s in slots if s in remap]
+
+    # -- slot accessors ----------------------------------------------------
+
+    def key_slots(self, key: str) -> List[int]:
+        kix = self._key_index.get(key)
+        if kix is None:
+            return []
+        return self._slots_by_key.get(kix, [])
+
+    def key_clock_arrays(self, key: str
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(vv[K, R], dot_id[K], dot_n[K]) for one key — a view-copy slice."""
+        slots = self.key_slots(key)
+        R = self.n_replicas
+        if not slots:
+            return (np.zeros((0, R), np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, np.int32))
+        s = np.asarray(slots)
+        return self.vv[s, :R], self.dot_id[s], self.dot_n[s]
+
+    def total_keys(self) -> int:
+        return sum(1 for slots in self._slots_by_key.values() if slots)
+
+    def total_versions(self) -> int:
+        return int(self.valid[: self.n_slots].sum())
+
+    def metadata_size(self, key: str) -> int:
+        """Paper's space metric: 2 ints per plain component, 3 per dotted."""
+        vv, dot_id, dot_n = self.key_clock_arrays(key)
+        if vv.shape[0] == 0:
+            return 0
+        R = vv.shape[1]
+        ar = np.arange(R, dtype=np.int32)
+        plain = vv > 0
+        dotted = (dot_id[:, None] == ar) & (dot_n[:, None] > 0)
+        return int(2 * (plain & ~dotted).sum() + 3 * dotted.sum())
+
+    # -- boundary codec (object clocks at the client API edge only) --------
+
+    def encode_clock(self, clock: DVV) -> Tuple[np.ndarray, int, int]:
+        """Encode one object clock into *this store's* universe (growing it)."""
+        for r in clock.ids():
+            self.intern_replica(r)
+        R = self.n_replicas
+        vv = np.zeros(R, np.int32)
+        dot_id, dot_n = NO_DOT, 0
+        for (r, m, n) in clock.components:
+            col = self._replica_index[r]
+            vv[col] = m
+            if n:
+                if dot_id != NO_DOT:
+                    raise ValueError("packed store supports at most one dot")
+                dot_id, dot_n = col, n
+        return vv, dot_id, dot_n
+
+    def decode_slot(self, slot: int) -> DVV:
+        vv = self.vv[slot]
+        return B.decode(vv[: self.n_replicas], int(self.dot_id[slot]),
+                        int(self.dot_n[slot]), self.replica_ids)
+
+    def versions(self, key: str) -> FrozenSet[Version]:
+        """Client-edge decode of one key's live versions."""
+        return frozenset(
+            Version(self.decode_slot(s), self.values[s])
+            for s in self.key_slots(key))
+
+    # -- per-key mutation (control plane: PUT / replication messages) ------
+
+    def _insert_slot(self, kix: int, vv: np.ndarray, dot_id: int, dot_n: int,
+                     value: Any) -> int:
+        self._ensure_capacity(1)
+        s = self.n_slots
+        self.vv[s, : len(vv)] = vv
+        self.vv[s, len(vv):] = 0
+        self.dot_id[s] = dot_id
+        self.dot_n[s] = dot_n
+        self.key_ix[s] = kix
+        self.valid[s] = True
+        self.values[s] = value
+        self.n_slots += 1
+        self._slots_by_key.setdefault(kix, []).append(s)
+        return s
+
+    def _kill_slots(self, kix: int, dead: Sequence[int]) -> None:
+        if not len(dead):
+            return
+        self.valid[np.asarray(dead)] = False
+        self.n_dead += len(dead)
+        deadset = set(int(d) for d in dead)
+        self._slots_by_key[kix] = [
+            s for s in self._slots_by_key[kix] if s not in deadset]
+
+    def sync_key(self, key: str, inc_vv: np.ndarray, inc_dot_id: np.ndarray,
+                 inc_dot_n: np.ndarray, inc_values: Sequence[Any]) -> bool:
+        """Merge incoming clocks (already in local columns) into one key.
+
+        Pure numpy — the per-key path taken by PUT and replication-message
+        delivery.  Local slots are listed first so duplicates keep the
+        resident copy.  Returns True iff the key's version set changed.
+        """
+        kix = self.intern_key(key)
+        slots = self._slots_by_key.get(kix, [])
+        R = self.n_replicas
+        L, M = len(slots), int(inc_vv.shape[0])
+        if M == 0:
+            return False
+        K = L + M
+        vvs = np.zeros((K, R), np.int32)
+        dids = np.full(K, NO_DOT, np.int32)
+        dns = np.zeros(K, np.int32)
+        if L:
+            s = np.asarray(slots)
+            vvs[:L] = self.vv[s, :R]
+            dids[:L] = self.dot_id[s]
+            dns[:L] = self.dot_n[s]
+        vvs[L:, : inc_vv.shape[1]] = inc_vv
+        dids[L:] = inc_dot_id
+        dns[L:] = inc_dot_n
+
+        mask = B.sync_mask_np(vvs, dids, dns, np.ones(K, bool))
+        changed = False
+        dead = [slots[j] for j in range(L) if not mask[j]]
+        if dead:
+            self._kill_slots(kix, dead)
+            changed = True
+        for j in range(M):
+            if mask[L + j]:
+                self._insert_slot(kix, inc_vv[j], int(inc_dot_id[j]),
+                                  int(inc_dot_n[j]), inc_values[j])
+                changed = True
+        self.compact()
+        return changed
+
+    def sync_key_objects(self, key: str, versions: Iterable[Version]) -> bool:
+        """Boundary codec + merge for object versions reaching one key (the
+        control-plane path: replication messages, object-payload staging).
+
+        The deterministic (repr(clock), repr(value)) ordering decides
+        duplicate-clock tie-breaks; keep it in this one place.
+        """
+        ordered = sorted(versions,
+                         key=lambda v: (repr(v.clock), repr(v.value)))
+        if not ordered:
+            self.intern_key(key)
+            return False
+        rows = [self.encode_clock(v.clock) for v in ordered]
+        R = self.n_replicas
+        vv = np.zeros((len(rows), R), np.int32)
+        for i, (row_vv, _, _) in enumerate(rows):
+            vv[i, : len(row_vv)] = row_vv
+        return self.sync_key(
+            key, vv, np.asarray([r[1] for r in rows], np.int32),
+            np.asarray([r[2] for r in rows], np.int32),
+            [v.value for v in ordered])
+
+    def update_key(self, key: str, ctx_vv: np.ndarray, coordinator: str,
+                   value: Any) -> Tuple[np.ndarray, int, int]:
+        """Paper §5.3 update, entirely in arrays.
+
+        ``ctx_vv`` is the context ceiling ⌈S⌉ already in local columns
+        (length ≤ R; zero-padded).  Mints the new clock with the dot at the
+        coordinator, syncs it into the key, returns the new clock arrays.
+        """
+        r_ix = self.intern_replica(coordinator)
+        R = self.n_replicas
+        vv = np.zeros(R, np.int32)
+        vv[: len(ctx_vv)] = ctx_vv
+        lvv, ldid, ldn = self.key_clock_arrays(key)
+        local_max = B.effective_ceil_np(lvv, ldid, ldn, r_ix) \
+            if lvv.shape[0] else 0
+        # Mirrors core.dvv.update: m = ⌈S⌉_r from the context, n = ⌈Sr⌉_r + 1.
+        # The §5.4 invariant guarantees n > m (all r-events are known at r).
+        dot_n = local_max + 1
+        self.sync_key(key, vv[None, :], np.asarray([r_ix], np.int32),
+                      np.asarray([dot_n], np.int32), [value])
+        return vv, r_ix, dot_n
+
+    def context_ceiling(self, context: Iterable[DVV]) -> np.ndarray:
+        """⌈S⌉ of a client context (object clocks — the API edge), in local
+        columns, growing the universe for unseen replica ids."""
+        clocks = list(context)
+        for c in clocks:
+            for r in c.ids():
+                self.intern_replica(r)
+        vv = np.zeros(self.n_replicas, np.int32)
+        for c in clocks:
+            for (r, m, n) in c.components:
+                col = self._replica_index[r]
+                vv[col] = max(vv[col], m, n)
+        return vv
+
+    # -- bulk anti-entropy (the hot path: arrays in, arrays out) -----------
+
+    def payload(self, keys: Optional[Iterable[str]] = None) -> PackedPayload:
+        """Extract the live slots for ``keys`` (default: all) as one payload.
+
+        Pure array slicing — zero object decode.
+        """
+        R = self.n_replicas
+        if keys is None:
+            rows = np.flatnonzero(self.valid[: self.n_slots])
+            kixs = self.key_ix[rows]
+            sel_keys = self.keys
+            out_kix = kixs.astype(np.int32)
+        else:
+            want = [self._key_index[k] for k in keys if k in self._key_index]
+            sel_keys = [self.keys[kx] for kx in want]
+            rows_l: List[int] = []
+            out_l: List[int] = []
+            for out_ix, kx in enumerate(want):
+                for s in self._slots_by_key.get(kx, []):
+                    rows_l.append(s)
+                    out_l.append(out_ix)
+            rows = np.asarray(rows_l, dtype=np.int64)
+            out_kix = np.asarray(out_l, dtype=np.int32)
+        if len(rows) == 0:
+            return PackedPayload(tuple(self.replica_ids), tuple(sel_keys),
+                                 np.zeros((0, R), np.int32),
+                                 np.zeros(0, np.int32), np.zeros(0, np.int32),
+                                 np.zeros(0, np.int32), ())
+        return PackedPayload(
+            replica_ids=tuple(self.replica_ids),
+            keys=tuple(sel_keys),
+            vv=self.vv[rows, :R].copy(),
+            dot_id=self.dot_id[rows].copy(),
+            dot_n=self.dot_n[rows].copy(),
+            key_ix=out_kix,
+            values=tuple(self.values[int(s)] for s in rows),
+        )
+
+    def _remap_columns(self, payload: PackedPayload
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Map payload columns into the local universe with one gather."""
+        col_map = np.asarray(
+            [self.intern_replica(r) for r in payload.replica_ids], np.int64)
+        R = self.n_replicas
+        M = len(payload)
+        vv = np.zeros((M, R), np.int32)
+        if len(col_map):
+            vv[:, col_map] = payload.vv
+        dot_id = np.where(payload.dot_id != NO_DOT,
+                          col_map[np.clip(payload.dot_id, 0, None)]
+                          if len(col_map) else payload.dot_id,
+                          NO_DOT).astype(np.int32)
+        return vv, dot_id
+
+    def apply_payload(self, payload: PackedPayload, *,
+                      mask_fn=None) -> int:
+        """One anti-entropy round: remap → group → sync_mask → write-back.
+
+        ``mask_fn(vvs[N, K, R], dot_ids[N, K], dot_ns[N, K], valid[N, K])
+        -> bool[N, K]`` defaults to the numpy reference twin of
+        ``core.batched.sync_mask``; pass ``kernels.dvv_ops.dvv_sync_mask``
+        for the fused Pallas kernel.  Returns the number of keys whose
+        version set changed.
+
+        Fully vectorized: grouping is one stable sort + two fancy-index
+        scatters; write-back is one masked kill + one bulk append.  No
+        per-key DVV objects, no per-key numpy calls.
+        """
+        M = len(payload)
+        if M == 0:
+            return 0
+        inc_vv, inc_did = self._remap_columns(payload)
+        inc_dn = payload.dot_n
+        # Collapse duplicate payload keys to one group each (a caller can
+        # legitimately request the same key twice, e.g. antientropy with a
+        # repeated key list); two groups for one key would double-insert.
+        key_ixs_all = np.asarray(
+            [self.intern_key(k) for k in payload.keys], np.int64)
+        key_ixs, inverse = np.unique(key_ixs_all, return_inverse=True)
+        R = self.n_replicas
+        N = len(key_ixs)
+
+        # One group per payload key; local resident slots occupy the first
+        # positions (duplicates keep the resident copy), incoming rows
+        # follow in payload order.
+        local_lists = [self._slots_by_key.get(int(kx), []) for kx in key_ixs]
+        loc_counts = np.asarray([len(l) for l in local_lists], np.int64)
+        loc_rows = np.asarray(
+            [s for l in local_lists for s in l], dtype=np.int64)
+        loc_group = np.repeat(np.arange(N), loc_counts)
+        loc_start = np.zeros(N + 1, np.int64)
+        np.cumsum(loc_counts, out=loc_start[1:])
+        loc_pos = np.arange(len(loc_rows)) - loc_start[loc_group]
+
+        inc_group = inverse[payload.key_ix]
+        order = np.argsort(inc_group, kind="stable")
+        sorted_g = inc_group[order]
+        run_start = np.searchsorted(sorted_g, np.arange(N))
+        inc_pos = np.empty(M, np.int64)
+        inc_pos[order] = np.arange(M) - run_start[sorted_g]
+        inc_pos += loc_counts[inc_group]
+
+        counts = loc_counts + np.bincount(inc_group, minlength=N)
+        K = int(counts.max(initial=1))
+        vvs = np.zeros((N, K, R), np.int32)
+        dids = np.full((N, K), NO_DOT, np.int32)
+        dns = np.zeros((N, K), np.int32)
+        valid = np.zeros((N, K), bool)
+        if len(loc_rows):
+            vvs[loc_group, loc_pos] = self.vv[loc_rows, :R]
+            dids[loc_group, loc_pos] = self.dot_id[loc_rows]
+            dns[loc_group, loc_pos] = self.dot_n[loc_rows]
+            valid[loc_group, loc_pos] = True
+        vvs[inc_group, inc_pos] = inc_vv
+        dids[inc_group, inc_pos] = inc_did
+        dns[inc_group, inc_pos] = inc_dn
+        valid[inc_group, inc_pos] = True
+
+        if mask_fn is None:
+            mask = B.sync_mask_np(vvs, dids, dns, valid)
+        else:
+            mask = np.asarray(mask_fn(vvs, dids, dns, valid))
+
+        # -- write-back: masked kill of local slots ------------------------
+        changed_groups = np.zeros(N, bool)
+        if len(loc_rows):
+            loc_keep = mask[loc_group, loc_pos]
+            dead_rows = loc_rows[~loc_keep]
+            if len(dead_rows):
+                self.valid[dead_rows] = False
+                self.n_dead += len(dead_rows)
+                dead_set = set(dead_rows.tolist())
+                for g in np.unique(loc_group[~loc_keep]):
+                    kix = int(key_ixs[g])
+                    self._slots_by_key[kix] = [
+                        s for s in self._slots_by_key[kix]
+                        if s not in dead_set]
+                changed_groups[loc_group[~loc_keep]] = True
+
+        # -- write-back: bulk append of surviving incoming rows ------------
+        new_rows = np.flatnonzero(mask[inc_group, inc_pos])
+        n_new = len(new_rows)
+        if n_new:
+            self._ensure_capacity(n_new)
+            s0 = self.n_slots
+            dst = s0 + np.arange(n_new)
+            self.vv[dst, :R] = inc_vv[new_rows]
+            self.vv[dst, R:] = 0
+            self.dot_id[dst] = inc_did[new_rows]
+            self.dot_n[dst] = inc_dn[new_rows]
+            groups_new = inc_group[new_rows]
+            kix_new = key_ixs[groups_new]
+            self.key_ix[dst] = kix_new
+            self.valid[dst] = True
+            for i, row in enumerate(new_rows):
+                self.values[s0 + i] = payload.values[int(row)]
+                self._slots_by_key[int(kix_new[i])].append(s0 + i)
+            self.n_slots += n_new
+            changed_groups[groups_new] = True
+
+        self.compact()
+        return int(changed_groups.sum())
+
+    # -- misc ---------------------------------------------------------------
+
+    def clone(self) -> "PackedVersionStore":
+        out = PackedVersionStore()
+        out.vv = self.vv.copy()
+        out.dot_id = self.dot_id.copy()
+        out.dot_n = self.dot_n.copy()
+        out.key_ix = self.key_ix.copy()
+        out.valid = self.valid.copy()
+        out.values = list(self.values)
+        out.n_slots = self.n_slots
+        out.n_dead = self.n_dead
+        out.replica_ids = list(self.replica_ids)
+        out._replica_index = dict(self._replica_index)
+        out.keys = list(self.keys)
+        out._key_index = dict(self._key_index)
+        out._slots_by_key = {k: list(v) for k, v in self._slots_by_key.items()}
+        return out
+
+    def __repr__(self) -> str:
+        return (f"<PackedVersionStore keys={self.total_keys()} "
+                f"versions={self.total_versions()} R={self.n_replicas}>")

@@ -1,28 +1,42 @@
-"""A replica node: per-key version sets + the paper's node-local operations."""
+"""A replica node: per-key version sets + the paper's node-local operations.
+
+Two storage backends implement the same node-local surface:
+
+* ``PackedBackend`` — the default for the DVV mechanism.  Clocks live as
+  packed int32 arrays (``store.packed.PackedVersionStore``); object ``DVV``s
+  appear only at the client API edge (GET contexts, PUT acks) and in
+  control-plane replication messages.  Anti-entropy payloads are
+  ``PackedPayload`` arrays end to end.
+* ``ObjectBackend`` — Python clock objects in a dict, used by every other
+  mechanism (version vectors, LWW, the causal-history oracle) and — forced
+  via ``packed=False`` — as the conformance reference the packed store is
+  tested observationally equal to.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, FrozenSet, Iterable, Optional
+from typing import Any, Dict, FrozenSet, Iterable, Optional, Union
 
+from ..core import batched as B
 from ..core.kernel import Mechanism
+from .packed import PackedPayload, PackedVersionStore
 from .version import Version, clocks_of, sync_versions
 
+Payload = Union[Dict[str, FrozenSet[Version]], PackedPayload]
 
-@dataclass
-class ReplicaNode:
-    node_id: str
-    mechanism: Mechanism
-    store: Dict[str, FrozenSet[Version]] = field(default_factory=dict)
+
+class ObjectBackend:
+    """Per-key frozensets of (clock, value) objects — the generic backend."""
+
+    def __init__(self, mechanism: Mechanism, node_id: str):
+        self.mechanism = mechanism
+        self.node_id = node_id
+        self.store: Dict[str, FrozenSet[Version]] = {}
 
     def versions(self, key: str) -> FrozenSet[Version]:
         return self.store.get(key, frozenset())
 
-    def clocks(self, key: str) -> FrozenSet[Any]:
-        return clocks_of(self.versions(key))
-
-    # -- §4.1 node-local steps -------------------------------------------------
-    def apply_sync(self, key: str, incoming: FrozenSet[Version]) -> FrozenSet[Version]:
-        """S_i' = sync(S_i, incoming); store and return it."""
+    def apply_sync(self, key: str, incoming: FrozenSet[Version]
+                   ) -> FrozenSet[Version]:
         merged = sync_versions(
             self.versions(key), incoming,
             total_order=not self.mechanism.tracks_concurrency)
@@ -31,31 +45,160 @@ class ReplicaNode:
 
     def coordinate_update(self, key: str, value: Any,
                           context: FrozenSet[Any], *,
-                          client_id: str = "?", client_counter: int = 0,
-                          wall_time: float = 0.0) -> Version:
-        """u = update(S, S_C, C) followed by S_C' = sync(S_C, {u})."""
+                          client_id: str, client_counter: int,
+                          wall_time: float) -> Version:
         u_clock = self.mechanism.update(
-            context, self.clocks(key), self.node_id,
+            context, clocks_of(self.versions(key)), self.node_id,
             client_id, client_counter, wall_time)
         version = Version(u_clock, value)
         self.apply_sync(key, frozenset({version}))
         return version
 
-    # -- anti-entropy ------------------------------------------------------------
     def antientropy_payload(self, keys: Optional[Iterable[str]] = None
                             ) -> Dict[str, FrozenSet[Version]]:
         if keys is None:
             keys = list(self.store.keys())
         return {k: self.versions(k) for k in keys}
 
-    def receive_antientropy(self, payload: Dict[str, FrozenSet[Version]]) -> None:
-        for k, versions in payload.items():
-            self.apply_sync(k, versions)
+    def receive_antientropy(self, payload: Payload) -> int:
+        changed = 0
+        for k, versions in _as_object_payload(payload).items():
+            before = self.versions(k)
+            if self.apply_sync(k, versions) != before:
+                changed += 1
+        return changed
 
-    # -- introspection -------------------------------------------------------------
     def metadata_size(self, key: str) -> int:
-        """Total integers stored in clocks for ``key`` (paper's space metric)."""
         return sum(v.clock.size() for v in self.versions(key))
 
     def total_keys(self) -> int:
         return len(self.store)
+
+
+class PackedBackend:
+    """Packed int32 clocks as the resident representation (DVV only)."""
+
+    def __init__(self, mechanism: Mechanism, node_id: str):
+        if mechanism.name != "dvv":
+            # The packed backend *implements* the DVV §5.3 update/sync in
+            # arrays; running it under another mechanism would silently
+            # swap that mechanism's semantics for DVV's.
+            raise ValueError(
+                f"packed backend implements DVV semantics; mechanism "
+                f"{mechanism.name!r} must use the object backend")
+        self.mechanism = mechanism
+        self.node_id = node_id
+        self.packed = PackedVersionStore()
+        self.packed.intern_replica(node_id)
+
+    def versions(self, key: str) -> FrozenSet[Version]:
+        return self.packed.versions(key)           # edge decode, one key
+
+    def apply_sync(self, key: str, incoming: FrozenSet[Version]
+                   ) -> FrozenSet[Version]:
+        """Object versions arrive from control-plane replication messages;
+        encode at the boundary, then merge in arrays."""
+        self.packed.sync_key_objects(key, incoming)
+        return self.versions(key)
+
+    def coordinate_update(self, key: str, value: Any,
+                          context: FrozenSet[Any], *,
+                          client_id: str, client_counter: int,
+                          wall_time: float) -> Version:
+        ctx_vv = self.packed.context_ceiling(context)   # edge encode
+        vv, r_ix, dot_n = self.packed.update_key(
+            key, ctx_vv, self.node_id, value)
+        # Decode only the freshly minted clock for the PutAck (edge decode).
+        clock = B.decode(vv[: self.packed.n_replicas], r_ix, dot_n,
+                         self.packed.replica_ids)
+        return Version(clock, value)
+
+    def antientropy_payload(self, keys: Optional[Iterable[str]] = None
+                            ) -> PackedPayload:
+        return self.packed.payload(keys)           # arrays out, zero decode
+
+    def receive_antientropy(self, payload: Payload, *,
+                            mask_fn=None) -> int:
+        if isinstance(payload, PackedPayload):     # arrays in, zero encode
+            return self.packed.apply_payload(payload, mask_fn=mask_fn)
+        changed = 0
+        for k, versions in payload.items():
+            before = self.versions(k)
+            if self.apply_sync(k, versions) != before:
+                changed += 1
+        return changed
+
+    def metadata_size(self, key: str) -> int:
+        return self.packed.metadata_size(key)
+
+    def total_keys(self) -> int:
+        return len(self.packed.keys)
+
+
+def _as_object_payload(payload: Payload) -> Dict[str, FrozenSet[Version]]:
+    """Decode a packed payload for an object-backend receiver (mixed-backend
+    interop; not a hot path)."""
+    if not isinstance(payload, PackedPayload):
+        return payload
+    out: Dict[str, set] = {k: set() for k in payload.keys}
+    R = len(payload.replica_ids)
+    for i in range(len(payload)):
+        clock = B.decode(payload.vv[i, :R], int(payload.dot_id[i]),
+                         int(payload.dot_n[i]), payload.replica_ids)
+        out[payload.keys[int(payload.key_ix[i])]].add(
+            Version(clock, payload.values[i]))
+    return {k: frozenset(v) for k, v in out.items()}
+
+
+class ReplicaNode:
+    """Facade over a storage backend; the paper's §4.1 node-local steps."""
+
+    def __init__(self, node_id: str, mechanism: Mechanism,
+                 packed: Optional[bool] = None):
+        self.node_id = node_id
+        self.mechanism = mechanism
+        if packed is None:
+            packed = mechanism.name == "dvv"
+        self.backend = (PackedBackend if packed else ObjectBackend)(
+            mechanism, node_id)
+
+    @property
+    def is_packed(self) -> bool:
+        return isinstance(self.backend, PackedBackend)
+
+    def versions(self, key: str) -> FrozenSet[Version]:
+        return self.backend.versions(key)
+
+    def clocks(self, key: str) -> FrozenSet[Any]:
+        return clocks_of(self.versions(key))
+
+    # -- §4.1 node-local steps ------------------------------------------------
+    def apply_sync(self, key: str, incoming: FrozenSet[Version]
+                   ) -> FrozenSet[Version]:
+        """S_i' = sync(S_i, incoming); store and return it."""
+        return self.backend.apply_sync(key, incoming)
+
+    def coordinate_update(self, key: str, value: Any,
+                          context: FrozenSet[Any], *,
+                          client_id: str = "?", client_counter: int = 0,
+                          wall_time: float = 0.0) -> Version:
+        """u = update(S, S_C, C) followed by S_C' = sync(S_C, {u})."""
+        return self.backend.coordinate_update(
+            key, value, context, client_id=client_id,
+            client_counter=client_counter, wall_time=wall_time)
+
+    # -- anti-entropy ------------------------------------------------------------
+    def antientropy_payload(self, keys: Optional[Iterable[str]] = None
+                            ) -> Payload:
+        return self.backend.antientropy_payload(keys)
+
+    def receive_antientropy(self, payload: Payload) -> int:
+        return self.backend.receive_antientropy(payload)
+
+    # -- introspection -------------------------------------------------------------
+    def metadata_size(self, key: str) -> int:
+        """Total integers stored in clocks for ``key`` (paper's space metric)."""
+        return self.backend.metadata_size(key)
+
+    def total_keys(self) -> int:
+        return self.backend.total_keys()

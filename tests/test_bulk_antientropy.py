@@ -3,6 +3,9 @@ on identical divergent states — property-tested over random store runs."""
 import random
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -22,6 +22,9 @@ from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, List, Tuple
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

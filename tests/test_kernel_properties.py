@@ -3,6 +3,10 @@ from __future__ import annotations
 
 from typing import Dict, FrozenSet, Tuple
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -9,8 +9,10 @@ import pytest
 
 from repro.core import DVV
 from repro.core import batched as B
-from repro.kernels.dvv_ops import dvv_concurrent, dvv_dominates, dvv_leq
-from repro.kernels.dvv_ops.ref import concurrent_ref, leq_ref
+from repro.kernels.dvv_ops import (
+    dvv_concurrent, dvv_dominates, dvv_leq, dvv_sync_mask,
+)
+from repro.kernels.dvv_ops.ref import concurrent_ref, leq_ref, sync_mask_ref
 from repro.kernels.flash_attention import flash_attention, gqa_flash_attention
 from repro.kernels.flash_attention.ref import mha_ref
 from repro.kernels.ssd_scan import ssd_scan
@@ -65,6 +67,30 @@ def test_dvv_concurrent_and_dominates_consistency():
     dom = np.asarray(dvv_dominates(*args))
     pure_dom = np.array([x.dominates(y) for x, y in zip(xs, ys)])
     np.testing.assert_array_equal(dom, pure_dom)
+
+
+@pytest.mark.parametrize("n_replicas", [1, 3, 9])
+@pytest.mark.parametrize("n_keys,max_versions", [(1, 1), (19, 4), (150, 6)])
+def test_dvv_sync_mask_fused_kernel_sweep(n_replicas, n_keys, max_versions):
+    """The fused pairwise-dominance kernel equals the jnp sync_mask
+    reference on randomized per-key clock sets (incl. invalid padding)."""
+    rng = random.Random(n_replicas * 7919 + n_keys + max_versions)
+    universe = [f"r{i}" for i in range(n_replicas)]
+    vvs = np.zeros((n_keys, max_versions, n_replicas), np.int32)
+    dids = np.full((n_keys, max_versions), B.NO_DOT, np.int32)
+    dns = np.zeros((n_keys, max_versions), np.int32)
+    valid = np.zeros((n_keys, max_versions), bool)
+    for i in range(n_keys):
+        for j in range(rng.randint(0, max_versions)):
+            clock = _rand_clock(rng, universe)
+            vvs[i, j], dids[i, j], dns[i, j] = B.encode(clock, universe)
+            valid[i, j] = True
+    args = [jnp.asarray(a) for a in (vvs, dids, dns, valid)]
+    got = np.asarray(dvv_sync_mask(*args))
+    ref = np.asarray(sync_mask_ref(*args))
+    np.testing.assert_array_equal(got, ref)
+    np_ref = B.sync_mask_np(vvs, dids, dns, valid)
+    np.testing.assert_array_equal(got, np_ref)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,316 @@
+"""Conformance: the array-resident packed store is observationally equal to
+the object store on randomized PUT/GET/sync/partition schedules.
+
+Twin KVClusters — one with ``packed=True`` (int32 arrays resident, the
+default for DVV), one with ``packed=False`` (Python ``DVV`` objects, the
+reference semantics) — execute identical schedules; after every phase all
+per-node version sets, values, sibling counts and metadata sizes must
+match.  Schedules include *dynamic universe growth*: coordinators outside
+the initial replica set join mid-run, forcing replica-id interning and
+column growth in the packed store.
+
+Runs deterministically on fixed seeds; when hypothesis is available the
+same driver is additionally fuzzed.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import DVV_MECHANISM
+from repro.core import batched as B
+from repro.store import (
+    KVCluster, PackedPayload, PackedVersionStore, SimNetwork, Unavailable,
+)
+from repro.store.bulk import bulk_receive_antientropy, bulk_sync
+
+KEYS = tuple(f"k{i}" for i in range(6))
+
+
+# ---------------------------------------------------------------------------
+# The schedule driver (shared by deterministic and hypothesis runs).
+# ---------------------------------------------------------------------------
+
+def _drive(packed: bool, seed: int, ops: int = 120, *,
+           grow_universe: bool = True) -> KVCluster:
+    """Run one randomized schedule; identical seeds ⇒ identical schedules."""
+    rng = random.Random(seed)
+    nodes = ("a", "b", "c", "d")
+    # Universe growth: only the first two nodes coordinate for the first
+    # half of the run; c and d appear later, growing every packed store's
+    # replica universe mid-flight.
+    c = KVCluster(nodes, DVV_MECHANISM, network=SimNetwork(seed=seed),
+                  packed=packed)
+    contexts = {}
+    for i in range(ops):
+        active = nodes if (not grow_universe or i > ops // 2) else nodes[:2]
+        key, node = rng.choice(KEYS), rng.choice(active)
+        p = rng.random()
+        if p < 0.25:
+            try:
+                contexts[(node, key)] = c.get(key, via=node).context
+            except Unavailable:
+                pass
+        elif p < 0.70:
+            ctx = contexts.get((node, key), frozenset()) \
+                if rng.random() < 0.6 else frozenset()
+            c.put(key, f"v{i}", context=ctx, via=node, coordinator=node)
+        elif p < 0.80:
+            c.deliver_replication()
+        elif p < 0.90:
+            c.antientropy_round()
+        elif p < 0.95:
+            halves = set(rng.sample(nodes, 2))
+            c.network.partition(halves, set(nodes) - halves)
+        else:
+            c.network.heal()
+    c.network.heal()
+    c.deliver_replication()
+    c.antientropy_round()
+    return c
+
+
+def _assert_equal(c_packed: KVCluster, c_obj: KVCluster, tag) -> None:
+    for n in c_packed.nodes:
+        for k in KEYS:
+            vp = c_packed.nodes[n].versions(k)
+            vo = c_obj.nodes[n].versions(k)
+            assert vp == vo, (tag, n, k, vp, vo)
+            assert (c_packed.nodes[n].metadata_size(k)
+                    == c_obj.nodes[n].metadata_size(k)), (tag, n, k)
+        assert c_packed.nodes[n].is_packed
+        assert not c_obj.nodes[n].is_packed
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 42, 1234])
+def test_packed_equals_object_on_random_schedules(seed):
+    c_packed = _drive(True, seed)
+    c_obj = _drive(False, seed)
+    _assert_equal(c_packed, c_obj, seed)
+
+
+def test_universe_growth_mid_run():
+    """New coordinators join mid-run; packed column growth must be exact."""
+    c_packed = _drive(True, 99, ops=200, grow_universe=True)
+    c_obj = _drive(False, 99, ops=200, grow_universe=True)
+    _assert_equal(c_packed, c_obj, "grow")
+    # all four replicas actually minted events
+    some = c_packed.nodes["a"].backend.packed
+    assert some.n_replicas >= 4
+
+
+# ---------------------------------------------------------------------------
+# Bulk anti-entropy: arrays in, arrays out; kernel path equals reference.
+# ---------------------------------------------------------------------------
+
+def _diverged(packed: bool, seed: int = 5) -> KVCluster:
+    rng = random.Random(seed)
+    nodes = ("a", "b", "c")
+    c = KVCluster(nodes, DVV_MECHANISM, network=SimNetwork(seed=seed),
+                  packed=packed)
+    for i in range(60):
+        c.put(rng.choice(KEYS), f"v{i}", via=rng.choice(nodes),
+              coordinator=rng.choice(nodes))
+    c.network.queue.clear()   # drop replication: maximum divergence
+    return c
+
+
+def test_packed_payload_roundtrip_and_equality():
+    c = _diverged(True)
+    p1 = c.nodes["a"].antientropy_payload()
+    p2 = c.nodes["a"].antientropy_payload()
+    assert isinstance(p1, PackedPayload)
+    assert p1 == p2
+    assert len(p1) == c.nodes["a"].backend.packed.total_versions()
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_bulk_antientropy_packed_matches_object(use_kernel):
+    cp = _diverged(True)
+    co = _diverged(False)
+    # packed → arrays end to end; object → per-key object sync
+    payload_p = cp.nodes["a"].antientropy_payload()
+    payload_o = co.nodes["a"].antientropy_payload()
+    changed_p = bulk_receive_antientropy(cp.nodes["b"], payload_p,
+                                         use_kernel=use_kernel)
+    changed_o = co.nodes["b"].receive_antientropy(payload_o)
+    assert changed_p == changed_o
+    for k in KEYS:
+        assert cp.nodes["b"].versions(k) == co.nodes["b"].versions(k), k
+    # convergence: re-applying the same payload changes nothing
+    assert bulk_receive_antientropy(cp.nodes["b"],
+                                    cp.nodes["a"].antientropy_payload(),
+                                    use_kernel=use_kernel) == 0
+
+
+def test_bulk_sync_object_entrypoint_empty_and_disjoint():
+    assert bulk_sync({}, {}) == {}
+    c = _diverged(False)
+    only_local = {k: c.nodes["a"].versions(k) for k in KEYS[:2]}
+    out = bulk_sync(only_local, {})
+    for k in KEYS[:2]:
+        assert out[k] == only_local[k]
+
+
+def test_bulk_sync_empty_universe_zero_clock():
+    """Dotless/zero clocks through the public bulk_sync must not crash on an
+    empty replica universe (R=0 staging store)."""
+    from repro.core.dvv import DVV
+    from repro.store import Version
+
+    z = Version(DVV.zero(), "a")
+    out = bulk_sync({}, {"k": frozenset({z})})
+    assert out["k"] == frozenset({z})
+    out2 = bulk_sync({"k": frozenset({z})}, {"k": frozenset({z})})
+    assert out2["k"] == frozenset({z})
+
+
+def test_bulk_sync_prunes_dominated_locals_without_incoming():
+    """sync() semantics hold per key even when a key has no incoming rows:
+    an internally dominated local set is reduced to its antichain."""
+    from repro.core.dvv import DVV
+    from repro.store import Version
+
+    low = Version(DVV((("a", 0, 1),)), "old")
+    high = Version(DVV((("a", 1, 2),)), "new")
+    out = bulk_sync({"k": frozenset({low, high})}, {})
+    assert out["k"] == frozenset({high})
+    # and mixed: one key with incoming, one without — both pruned
+    out2 = bulk_sync({"k": frozenset({low, high}), "j": frozenset({low})},
+                     {"j": frozenset({high})})
+    assert out2["k"] == frozenset({high})
+    assert out2["j"] == frozenset({high})
+
+
+def test_apply_payload_with_duplicate_keys_does_not_double_insert():
+    c = _diverged(True)
+    store = c.nodes["a"].backend.packed
+    dup = store.payload([KEYS[0], KEYS[0], KEYS[1]])
+    dst = c.nodes["b"].backend.packed
+    before = dst.total_versions()
+    dst.apply_payload(dup)
+    after = {k: dst.versions(k) for k in KEYS[:2]}
+    dst.apply_payload(dup)   # idempotent — and no duplicate slots
+    assert {k: dst.versions(k) for k in KEYS[:2]} == after
+    for k in KEYS[:2]:
+        assert len(dst.versions(k)) == len({v.clock for v in dst.versions(k)})
+    assert dst.total_versions() <= before + len(dup)
+
+
+def test_bulk_receive_on_object_backend_uses_batched_path():
+    """Object-backend DVV nodes must honor use_kernel (batched sweep), and
+    agree with the per-key object walk."""
+    co = _diverged(False)
+    ref = _diverged(False)
+    payload = co.nodes["a"].antientropy_payload()
+    changed_k = bulk_receive_antientropy(co.nodes["b"], payload,
+                                         use_kernel=True)
+    changed_o = ref.nodes["b"].receive_antientropy(
+        ref.nodes["a"].antientropy_payload())
+    assert changed_k == changed_o
+    for k in KEYS:
+        assert co.nodes["b"].versions(k) == ref.nodes["b"].versions(k), k
+
+
+def test_steady_state_antientropy_is_array_native():
+    """The acceptance criterion: zero per-key DVV encode/decode in the
+    steady-state bulk path — verified by monkeypatching the codec."""
+    import repro.core.batched as batched
+
+    cp = _diverged(True)
+    payload = cp.nodes["a"].antientropy_payload()
+    assert isinstance(payload, PackedPayload)
+
+    calls = {"encode": 0, "decode": 0}
+    real_encode, real_decode = batched.encode, batched.decode
+    enc = cp.nodes["b"].backend.packed.encode_clock
+
+    def count_encode(*a, **kw):
+        calls["encode"] += 1
+        return real_encode(*a, **kw)
+
+    def count_decode(*a, **kw):
+        calls["decode"] += 1
+        return real_decode(*a, **kw)
+
+    batched.encode, batched.decode = count_encode, count_decode
+    cp.nodes["b"].backend.packed.encode_clock = None  # would raise if used
+    try:
+        bulk_receive_antientropy(cp.nodes["b"], payload)
+        bulk_receive_antientropy(cp.nodes["b"], payload, use_kernel=True)
+    finally:
+        batched.encode, batched.decode = real_encode, real_decode
+        cp.nodes["b"].backend.packed.encode_clock = enc
+    assert calls == {"encode": 0, "decode": 0}
+
+
+# ---------------------------------------------------------------------------
+# PackedVersionStore unit behaviour.
+# ---------------------------------------------------------------------------
+
+def test_compaction_preserves_state():
+    c = _diverged(True, seed=11)
+    store = c.nodes["a"].backend.packed
+    before = {k: store.versions(k) for k in KEYS}
+    store.compact(force=True)
+    assert {k: store.versions(k) for k in KEYS} == before
+    assert store.n_dead == 0
+    assert store.valid[: store.n_slots].all()
+
+
+def test_slot_capacity_and_column_growth():
+    s = PackedVersionStore()
+    # force growth well past both initial capacities
+    for i in range(300):
+        r = f"replica{i % 13}"
+        rix = s.intern_replica(r)
+        vv = np.zeros(s.n_replicas, np.int32)
+        vv[rix] = i // 13
+        s.sync_key(f"key{i % 7}", vv[None, :],
+                   np.asarray([rix], np.int32),
+                   np.asarray([i // 13 + 1], np.int32), [f"v{i}"])
+    assert s.n_replicas == 13
+    assert s.total_keys() == 7
+    # every stored clock still satisfies the one-dot invariant n > m
+    live = np.flatnonzero(s.valid[: s.n_slots])
+    at = s.dot_id[live]
+    assert (s.dot_n[live] > s.vv[live, at]).all()
+
+
+def test_numpy_twin_matches_jnp_sync_mask():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    N, K, R = 23, 4, 5
+    vvs = rng.integers(0, 6, (N, K, R)).astype(np.int32)
+    dids = rng.integers(-1, R, (N, K)).astype(np.int32)
+    dns = np.where(
+        dids >= 0,
+        np.take_along_axis(vvs, np.clip(dids, 0, None)[..., None],
+                           axis=-1)[..., 0] + rng.integers(1, 4, (N, K)),
+        0).astype(np.int32)
+    valid = rng.random((N, K)) < 0.8
+    ref = np.asarray(B.sync_mask(jnp.asarray(vvs), jnp.asarray(dids),
+                                 jnp.asarray(dns), jnp.asarray(valid)))
+    got = B.sync_mask_np(vvs, dids, dns, valid)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzzing of the same driver (optional dependency).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=100_000),
+           st.booleans())
+    def test_packed_equals_object_fuzzed(seed, grow):
+        c_packed = _drive(True, seed, grow_universe=grow)
+        c_obj = _drive(False, seed, grow_universe=grow)
+        _assert_equal(c_packed, c_obj, (seed, grow))
+except ImportError:     # deterministic seeds above still run
+    pass
