@@ -1,22 +1,35 @@
 # Single gate every PR runs. `make test` is the tier-1 command from
-# ROADMAP.md; `bench-smoke` exercises the benchmark harness at toy sizes;
-# `lint` is a dependency-free syntax/bytecode pass (the container has no
-# flake8/ruff baked in).
+# ROADMAP.md (pytest.ini deselects `slow`-marked fuzz phases by default);
+# `make test-all` runs everything including the slow phases. `bench-smoke`
+# exercises the benchmark harness at toy sizes; `bench-delta` runs the full
+# divergence sweep and writes BENCH_delta_sync.json; `lint` is a
+# dependency-free syntax/bytecode pass (the container has no flake8/ruff
+# baked in).
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke bench lint check
+.PHONY: test test-all bench-smoke bench bench-delta lint check
 
 test:
 	$(PY) -m pytest -x -q
 
+test-all:
+	$(PY) -m pytest -q -m ""
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
+	$(PY) -c "from benchmarks.delta_bench import delta_sync_rows; \
+	          print('\n'.join(delta_sync_rows((256,), (0.05,), \
+	          json_path=None, reps=1)))"
 
 bench:
 	$(PY) -m benchmarks.run
+
+bench-delta:
+	$(PY) -c "from benchmarks.delta_bench import delta_sync_rows; \
+	          print('\n'.join(delta_sync_rows()))"
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -1,0 +1,212 @@
+"""Divergence-sweep benchmark: delta anti-entropy vs the full-payload round.
+
+The paper's argument is *concise* causality metadata; DESIGN.md §6 extends
+it to the protocol: a steady-state round should cost O(divergence), not
+O(store).  This sweep holds the store size fixed and varies the divergent
+key fraction (0.1% → 100%), measuring, per cell:
+
+  * the one-shot full-payload array round (``payload()`` + ``apply_payload``
+    — the PR-1 steady state, now the fallback),
+  * the two-phase delta round (digest diff → ranked divergent ranges →
+    sliced payload apply),
+  * wire bytes for both phases of each round, and
+  * the shape-bucketed jit cache: a warm bucketed ``sync_mask`` call vs a
+    fresh-trace (uncached) call at the very [N, K, R] shape the delta
+    round produced.
+
+CPU wall-times are indicative (single-core container); the structural wins
+— payload ∝ divergence and zero re-tracing — are what transfer to TPU.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import batched as B
+from repro.store.bulk import delta_plan
+from repro.store.packed import PackedPayload, PackedVersionStore
+
+
+def _bulk_store(n_keys: int, n_replicas: int = 8, seed: int = 0
+                ) -> PackedVersionStore:
+    """Vectorized store construction: one synthetic payload, one apply."""
+    rng = np.random.default_rng(seed)
+    universe = tuple(f"r{i}" for i in range(n_replicas))
+    keys = tuple(f"key{i}" for i in range(n_keys))
+    vv = rng.integers(0, 5, (n_keys, n_replicas)).astype(np.int32)
+    dot_id = rng.integers(0, n_replicas, n_keys).astype(np.int32)
+    dot_n = (vv[np.arange(n_keys), dot_id] + 1).astype(np.int32)
+    store = PackedVersionStore()
+    for r in universe:
+        store.intern_replica(r)
+    store.apply_payload(PackedPayload(
+        universe, keys, vv, dot_id, dot_n,
+        np.arange(n_keys, dtype=np.int32),
+        tuple(f"B{i}" for i in range(n_keys))))
+    return store
+
+
+def _diverge(local: PackedVersionStore, divergence: float, seed: int = 1
+             ) -> Tuple[PackedVersionStore, int]:
+    """Clone ``local`` and advance a ``divergence`` fraction of its keys on
+    the clone (each new version dominates the resident one)."""
+    rng = np.random.default_rng(seed)
+    remote = local.clone()
+    n_keys = len(local.keys)
+    n_div = max(1, int(round(n_keys * divergence)))
+    div = np.sort(rng.choice(n_keys, n_div, replace=False))
+    R = local.n_replicas
+    rows = np.flatnonzero(local.valid[: local.n_slots])
+    by_key = np.full(n_keys, -1, np.int64)
+    by_key[local.key_ix[rows]] = rows          # one live slot per key here
+    src = by_key[div]
+    vv = local.vv[src, :R].copy()
+    old_dot = local.dot_id[src]
+    # fold the old dot in (n = m+1 is contiguous), then mint a fresh dot
+    vv[np.arange(n_div), old_dot] = local.dot_n[src]
+    dot_id = rng.integers(0, R, n_div).astype(np.int32)
+    dot_n = (vv[np.arange(n_div), dot_id] + 1).astype(np.int32)
+    remote.apply_payload(PackedPayload(
+        tuple(local.replica_ids), tuple(local.keys[int(k)] for k in div),
+        vv, dot_id, dot_n, np.arange(n_div, dtype=np.int32),
+        tuple(f"D{int(k)}" for k in div)))
+    return remote, n_div
+
+
+def _timed(fn, reps: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _mask_shape_probe(local: PackedVersionStore, remote: PackedVersionStore
+                      ) -> Tuple[int, int, int]:
+    """The grouped [N, K, R] shape a delta round hands to sync_mask."""
+    ranked, width, _ = delta_plan(remote, local.sync_digest())
+    payload = remote.payload(key_ranges=ranked, ranges_width=width)
+    n = len(set(payload.keys))
+    return max(n, 1), 2, local.n_replicas
+
+
+def _jit_cache_cell(shape: Tuple[int, int, int], reps: int,
+                    warm: B.BucketedSyncMask) -> Tuple[float, float]:
+    """(uncached_us, warm_us) for a sync_mask call at ``shape``.
+
+    Uncached = a fresh ``jax.jit`` instance per call, the retrace every
+    fresh-shaped delta round pays without bucketing.  Warm = the shared
+    bucketed cache, second call onward.
+    """
+    rng = np.random.default_rng(0)
+    N, K, R = shape
+    vvs = rng.integers(0, 5, (N, K, R)).astype(np.int32)
+    dids = rng.integers(-1, R, (N, K)).astype(np.int32)
+    dns = np.where(dids >= 0, vvs[..., 0] + 1, 0).astype(np.int32)
+    valid = np.ones((N, K), bool)
+
+    def uncached():
+        fn = jax.jit(B.sync_mask)          # fresh trace, like a fresh shape
+        np.asarray(fn(vvs, dids, dns, valid))
+
+    uncached_us = _timed(uncached, max(1, reps - 1))
+    warm(vvs, dids, dns, valid)            # populate the bucket
+    warm_us = _timed(lambda: warm(vvs, dids, dns, valid), reps)
+    return uncached_us, warm_us
+
+
+def delta_sync_rows(n_keys_list: Sequence[int] = (1000, 10_000, 100_000),
+                    divergences: Sequence[float] = (0.001, 0.01, 0.1, 1.0),
+                    json_path: Optional[str] = "BENCH_delta_sync.json",
+                    reps: int = 3) -> List[str]:
+    """One row per (store size, divergent fraction); writes the JSON trace."""
+    out, trace = [], []
+    warm_cache = B.BucketedSyncMask()
+    for n_keys in n_keys_list:
+        local = _bulk_store(n_keys)
+        for divergence in divergences:
+            remote, n_div = _diverge(local, divergence)
+            full_payload = remote.payload()
+
+            clones = [local.clone() for _ in range(reps)]
+            it = iter(clones)
+            full_us = _timed(lambda: next(it).apply_payload(full_payload),
+                             reps)
+
+            def delta_round(dst):
+                ranked, width, _ = delta_plan(remote, dst.sync_digest())
+                payload = remote.payload(key_ranges=ranked,
+                                         ranges_width=width)
+                dst.apply_payload(payload)
+                return payload
+
+            clones_d = [local.clone() for _ in range(reps)]
+            it_d = iter(clones_d)
+            delta_us = _timed(lambda: delta_round(next(it_d)), reps)
+
+            # wire accounting + convergence sanity on fresh clones
+            probe = local.clone()
+            delta_payload = delta_round(probe)
+            ref = local.clone()
+            ref.apply_payload(full_payload)
+            assert probe.total_versions() == ref.total_versions(), \
+                (probe.total_versions(), ref.total_versions())
+            assert len(probe.sync_digest().diff(remote.sync_digest())) == 0
+
+            digest_bytes = (remote.sync_digest().fold(
+                min(remote.n_buckets, local.n_buckets)).nbytes()) * 2
+            shape = _mask_shape_probe(local, remote)
+            uncached_us, warm_us = _jit_cache_cell(shape, reps, warm_cache)
+
+            row = {
+                "n_keys": n_keys,
+                "divergence": divergence,
+                "divergent_keys": n_div,
+                "full_round_us": round(full_us, 1),
+                "delta_round_us": round(delta_us, 1),
+                "speedup_delta_vs_full": round(full_us / max(delta_us, 1e-9),
+                                               2),
+                "payload_slots_full": len(full_payload),
+                "payload_slots_delta": len(delta_payload),
+                "payload_bytes_full": full_payload.nbytes(),
+                "payload_bytes_delta": delta_payload.nbytes(),
+                "digest_bytes": digest_bytes,
+                "mask_shape": list(shape),
+                "uncached_mask_us": round(uncached_us, 1),
+                "warm_mask_us": round(warm_us, 1),
+                "speedup_warm_vs_uncached": round(
+                    uncached_us / max(warm_us, 1e-9), 2),
+            }
+            trace.append(row)
+            pct = divergence * 100
+            out.append(
+                f"delta_sync_n{n_keys}_d{pct:g}pct,{delta_us:.0f},"
+                f"speedup_vs_full={full_us / max(delta_us, 1e-9):.1f}x;"
+                f"bytes={delta_payload.nbytes() + digest_bytes}"
+                f"/{full_payload.nbytes()}")
+            out.append(
+                f"delta_mask_warm_n{n_keys}_d{pct:g}pct,{warm_us:.0f},"
+                f"speedup_vs_uncached="
+                f"{uncached_us / max(warm_us, 1e-9):.1f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({
+                "bench": "delta_sync",
+                "note": ("CPU wall-times, single core. Delta round = digest "
+                         "diff + ranked divergent ranges + sliced apply; "
+                         "full round = the PR-1 whole-store array path "
+                         "(kept as fallback). warm/uncached = shape-"
+                         "bucketed cached sync_mask vs a fresh jit trace "
+                         "at the delta round's grouped shape."),
+                "bucket_cache": warm_cache.cache_info(),
+                "rows": trace}, f, indent=1)
+    return out
+
+
+def rows() -> List[str]:
+    """The benchmark-harness hook (kept small; `make bench-delta` sweeps)."""
+    return delta_sync_rows((1000, 10_000), (0.01, 1.0), json_path=None,
+                           reps=2)

@@ -234,3 +234,90 @@ def sync_mask(vvs: jnp.ndarray, dot_ids: jnp.ndarray, dot_ns: jnp.ndarray,
     other_valid = valid[..., None, :]
     dominated = jnp.any((strictly_below | dup_earlier) & other_valid, axis=-1)
     return valid & ~dominated
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketed sync_mask dispatch (DESIGN.md §6).
+#
+# Delta anti-entropy rounds produce grouped [N, K, R] tensors of *arbitrary*
+# small shapes — every distinct shape would re-trace the jitted sync_mask
+# (or re-specialize the pallas_call).  Bucketing pads each dim to the next
+# power of two (with small floors) so the whole sweep space collapses into a
+# handful of shapes, each compiled once and warm thereafter.  Pad rows are
+# inert by construction: ``valid`` is False, and an invalid clock can
+# neither survive (mask = valid & …) nor dominate (domination is masked by
+# ``other_valid``); zero-filled replica columns denote empty ranges, which
+# is the exact meaning of an absent replica.
+# ---------------------------------------------------------------------------
+
+def _ceil_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def bucket_shape(n: int, k: int, r: int, *, min_n: int = 8, min_k: int = 2,
+                 min_r: int = 8) -> Tuple[int, int, int]:
+    """The power-of-two (N_block, K_pad, R_pad) bucket containing [n, k, r]."""
+    return (max(min_n, _ceil_pow2(n)), max(min_k, _ceil_pow2(k)),
+            max(min_r, _ceil_pow2(r)))
+
+
+def pad_sync_args(vvs: np.ndarray, dot_ids: np.ndarray, dot_ns: np.ndarray,
+                  valid: np.ndarray, shape: Tuple[int, int, int]):
+    """Zero/NO_DOT/False-pad a grouped sync tensor up to ``shape``."""
+    N, K, R = vvs.shape
+    Nb, Kb, Rb = shape
+    return (np.pad(vvs, ((0, Nb - N), (0, Kb - K), (0, Rb - R))),
+            np.pad(dot_ids, ((0, Nb - N), (0, Kb - K)),
+                   constant_values=NO_DOT),
+            np.pad(dot_ns, ((0, Nb - N), (0, Kb - K))),
+            np.pad(valid, ((0, Nb - N), (0, Kb - K))))
+
+
+class BucketedSyncMask:
+    """A ``mask_fn`` that shape-buckets its input and caches one compiled
+    callable per bucket.
+
+    ``impl`` is any sync_mask-compatible function ([N, K, R] + three [N, K]
+    → bool [N, K]); the default is the jnp reference, wrapped in one shared
+    ``jax.jit`` whose own cache is keyed by the bucketed shapes.  Pass
+    ``jit=False`` for impls that manage their own compilation cache (the
+    pallas wrapper) — bucketing is then what makes that cache hit.
+    ``hits``/``misses`` count warm vs cold buckets, which the delta
+    benchmark reports.
+    """
+
+    def __init__(self, impl=None, *, jit: bool = True):
+        base = sync_mask if impl is None else impl
+        self._fn = jax.jit(base) if jit else base
+        self._seen: set = set()
+        self.hits = 0
+        self.misses = 0
+
+    def __call__(self, vvs, dot_ids, dot_ns, valid) -> np.ndarray:
+        vvs = np.asarray(vvs)
+        dot_ids = np.asarray(dot_ids)
+        dot_ns = np.asarray(dot_ns)
+        valid = np.asarray(valid)
+        N, K, R = vvs.shape
+        if N == 0 or K == 0:
+            return np.zeros((N, K), bool)
+        key = bucket_shape(N, K, R)
+        if key in self._seen:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._seen.add(key)
+        args = pad_sync_args(vvs, dot_ids, dot_ns, valid, key)
+        out = np.asarray(self._fn(*args))
+        return out[:N, :K]
+
+    def cache_info(self) -> Dict[str, object]:
+        return {"hits": self.hits, "misses": self.misses,
+                "buckets": sorted(self._seen)}
+
+
+#: Module-level jnp-reference instance.  Product delta rounds use the numpy
+#: twin (mask_fn=None) or the kernel instance (`kernels.dvv_ops.
+#: dvv_sync_mask_bucketed`); this one serves conformance tests and callers
+#: that want the jitted jnp path without building their own cache.
+sync_mask_bucketed = BucketedSyncMask()

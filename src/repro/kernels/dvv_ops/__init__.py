@@ -1,7 +1,7 @@
 from .ops import (
     antientropy_obsolete, dvv_concurrent, dvv_dominates, dvv_leq,
-    dvv_sync_mask,
+    dvv_sync_mask, dvv_sync_mask_bucketed,
 )
 
 __all__ = ["dvv_leq", "dvv_dominates", "dvv_concurrent",
-           "antientropy_obsolete", "dvv_sync_mask"]
+           "antientropy_obsolete", "dvv_sync_mask", "dvv_sync_mask_bucketed"]

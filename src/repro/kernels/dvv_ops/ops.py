@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.batched import BucketedSyncMask
 from .dvv_ops import dvv_leq_pallas, dvv_sync_mask_pallas
 
 
@@ -29,6 +30,15 @@ def dvv_sync_mask(vvs, dot_ids, dot_ns, valid):
     return dvv_sync_mask_pallas(jnp.asarray(vvs), jnp.asarray(dot_ids),
                                 jnp.asarray(dot_ns), jnp.asarray(valid),
                                 interpret=_interpret())
+
+
+#: Shape-bucketed front end over the fused kernel: pads [N, K, R] to the
+#: power-of-two bucket (core.batched.bucket_shape) so every delta round —
+#: whatever its size — reuses one of a handful of warm compilations instead
+#: of re-tracing ``pallas_call`` at a fresh shape.  Pad rows are invalid and
+#: provably inert (tests/test_delta_sync.py).  ``jit=False``: the pallas
+#: wrapper is already jitted; bucketing is what makes its cache hit.
+dvv_sync_mask_bucketed = BucketedSyncMask(dvv_sync_mask, jit=False)
 
 
 def dvv_dominates(vx, ix, nx, vy, iy, ny):

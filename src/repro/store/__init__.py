@@ -1,7 +1,8 @@
 """Replicated key-value store (paper §4.1) over a simulated network."""
+from .bulk import DeltaSyncStats, delta_antientropy
 from .cluster import GetResult, KVCluster, PutAck
 from .network import SimNetwork, Unavailable
-from .packed import PackedPayload, PackedVersionStore
+from .packed import PackedPayload, PackedVersionStore, StoreDigest, key_bucket
 from .replica import ReplicaNode
 from .version import Version, clocks_of, sync_versions, values_of
 
@@ -10,4 +11,5 @@ __all__ = [
     "SimNetwork", "Unavailable",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
     "PackedVersionStore", "PackedPayload",
+    "StoreDigest", "DeltaSyncStats", "delta_antientropy", "key_bucket",
 ]

@@ -9,6 +9,14 @@ one ``sync_mask`` call — the jnp reference or the fused Pallas kernel
 single ``pallas_call``) — and writes the surviving rows back.  No per-key
 ``DVV`` object is encoded or decoded anywhere on that path.
 
+Steady state runs *delta* rounds (DESIGN.md §6): phase 1 exchanges digest
+trees (``PackedVersionStore.sync_digest``), phase 2 ships only the
+divergent key ranges via ``payload(key_ranges=...)``.  ``delta_antientropy``
+below is that two-phase round between two nodes; the one-shot full round
+stays available as the fallback (non-packed peers, digest-collision
+recovery) and as the conformance reference the delta round is tested
+byte-identical to.
+
 The object-level entry points (``bulk_sync`` on dicts of ``Version``s) are
 kept for control-plane callers and for conformance testing against
 ``ReplicaNode``'s object backend; they pay the boundary codec once on the
@@ -16,9 +24,12 @@ way in and once on the way out.
 """
 from __future__ import annotations
 
-from typing import Dict, FrozenSet, Union
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Optional, Tuple, Union
 
-from .packed import PackedPayload, PackedVersionStore
+import numpy as np
+
+from .packed import PackedPayload, PackedVersionStore, StoreDigest
 from .replica import PackedBackend, ReplicaNode, _as_object_payload
 from .version import Version
 
@@ -26,8 +37,113 @@ from .version import Version
 def _mask_fn(use_kernel: bool):
     if not use_kernel:
         return None                      # numpy/jnp reference inside packed
-    from ..kernels.dvv_ops import dvv_sync_mask
-    return dvv_sync_mask
+    # Shape-bucketed front end: delta rounds come in arbitrary small shapes;
+    # bucketing keeps the pallas_call cache warm across all of them.
+    from ..kernels.dvv_ops import dvv_sync_mask_bucketed
+    return dvv_sync_mask_bucketed
+
+
+# ---------------------------------------------------------------------------
+# Delta anti-entropy: digest exchange → ranked range request → sliced apply.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeltaSyncStats:
+    """What one delta round cost and did — the wire/compute accounting the
+    divergence benchmark reports per row."""
+
+    buckets_total: int        # digest-tree width
+    buckets_divergent: int    # leaves whose digests differed
+    buckets_sent: int         # after ranking / max_ranges truncation
+    payload_slots: int        # versions shipped in phase 2
+    payload_bytes: int        # phase-2 wire size
+    digest_bytes: int         # phase-1 wire size (both directions)
+    changed: int              # keys whose version set changed at the receiver
+    fallback: bool = False    # True when the full-payload round ran instead
+
+
+def rank_ranges(src_store: PackedVersionStore, divergent: np.ndarray,
+                width: int, *,
+                max_ranges: Optional[int] = None) -> np.ndarray:
+    """Rank divergent buckets (ids at ``width``) for shipping, biggest first.
+
+    The ranking key is the sender's live-slot count per bucket (the best
+    local proxy for how much catch-up a range carries); ties break on
+    bucket id so rounds are deterministic.  ``max_ranges`` caps a round.
+    A push can only fix ranges where the *sender* is ahead, so a capped
+    one-directional push can re-ship a receiver-ahead range forever;
+    capped rounds converge when run in both directions (as
+    ``KVCluster.delta_antientropy_round`` does) — the reverse push drains
+    a receiver-ahead range, after which it drops out of both diffs.
+    """
+    if len(divergent) == 0:
+        return divergent
+    counts = src_store.bucket_counts(width)
+    order = np.argsort(-counts[divergent], kind="stable")
+    ranked = divergent[order]
+    if max_ranges is not None:
+        ranked = ranked[:max_ranges]
+    return ranked
+
+
+def delta_plan(src_store: PackedVersionStore, dst_digest: StoreDigest, *,
+               max_ranges: Optional[int] = None
+               ) -> Tuple[np.ndarray, int, int]:
+    """Phase-1 planning: diff the digest trees (at the common width), rank
+    the divergent ranges.  Returns ``(ranked_buckets, width, n_divergent)``
+    where ``n_divergent`` counts divergent buckets before any
+    ``max_ranges`` truncation."""
+    width = min(src_store.n_buckets, dst_digest.n_buckets)
+    divergent = src_store.sync_digest().diff(dst_digest)
+    ranked = rank_ranges(src_store, divergent, width, max_ranges=max_ranges)
+    return ranked, width, len(divergent)
+
+
+def _object_payload_nbytes(payload: Dict[str, FrozenSet[Version]]) -> int:
+    """Wire-size estimate for an object payload, comparable to
+    ``PackedPayload.nbytes``: keys + clock reprs + value reprs."""
+    return sum(
+        len(k.encode())
+        + sum(len(repr(v.clock).encode()) + len(repr(v.value).encode())
+              for v in vs)
+        for k, vs in payload.items())
+
+
+def delta_antientropy(src: ReplicaNode, dst: ReplicaNode, *,
+                      use_kernel: bool = False,
+                      max_ranges: Optional[int] = None) -> DeltaSyncStats:
+    """One two-phase delta round: ``src`` pushes its divergent ranges to
+    ``dst``.  Cost is proportional to divergence, not store size.
+
+    Falls back to the one-shot full-payload round when either side lacks a
+    packed store (object backends have no digest tree).
+    """
+    sb, db = src.backend, dst.backend
+    if not (isinstance(sb, PackedBackend) and isinstance(db, PackedBackend)):
+        payload = src.antientropy_payload()
+        if isinstance(payload, PackedPayload):
+            slots, nbytes = len(payload), payload.nbytes()
+        else:
+            slots = sum(len(vs) for vs in payload.values())
+            nbytes = _object_payload_nbytes(payload)
+        changed = bulk_receive_antientropy(dst, payload,
+                                           use_kernel=use_kernel)
+        return DeltaSyncStats(0, 0, 0, slots, nbytes, 0, changed,
+                              fallback=True)
+
+    src_store, dst_store = sb.packed, db.packed
+    dst_digest = dst_store.sync_digest()
+    ranked, width, n_divergent = delta_plan(src_store, dst_digest,
+                                            max_ranges=max_ranges)
+    # Phase-1 wire: each side's tree travels folded to the common width.
+    digest_bytes = 2 * dst_digest.fold(width).nbytes()
+    if len(ranked) == 0:
+        return DeltaSyncStats(width, 0, 0, 0, 0, digest_bytes, 0)
+    payload = src_store.payload(key_ranges=ranked, ranges_width=width)
+    changed = db.receive_antientropy(payload, mask_fn=_mask_fn(use_kernel))
+    return DeltaSyncStats(width, n_divergent, len(ranked),
+                          len(payload), payload.nbytes(), digest_bytes,
+                          changed)
 
 
 def bulk_receive_antientropy(node: ReplicaNode,
@@ -54,7 +170,14 @@ def bulk_receive_antientropy(node: ReplicaNode,
             staged.payload(), mask_fn=_mask_fn(use_kernel))
     if node.mechanism.name == "dvv":
         payload_obj = _as_object_payload(payload)
-        local = {k: node.versions(k) for k in payload_obj}
+        # Sparse deltas: only stage keys the node actually stores — a key
+        # with no local slots has nothing to merge against, and staging its
+        # empty set would pay one boundary encode per absent key.
+        local = {}
+        for k in payload_obj:
+            versions = node.versions(k)
+            if versions:
+                local[k] = versions
         new_sets = bulk_sync(local, payload_obj, use_kernel=use_kernel)
         changed = 0
         for k, versions in new_sets.items():
@@ -73,9 +196,9 @@ def _stage_object_payload(payload: Dict[str, FrozenSet[Version]]
     maximal antichain — arbitrary input dicts may contain internally
     dominated versions (protocol stores never do).
     """
-    staged = PackedVersionStore()
-    for k in sorted(payload):
-        staged.sync_key_objects(k, payload[k])
+    staged = PackedVersionStore(track_digests=False)   # scratch store: no
+    for k in sorted(payload):                          # delta rounds, skip
+        staged.sync_key_objects(k, payload[k])         # digest upkeep
     return staged
 
 

@@ -17,6 +17,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from ..core.kernel import Mechanism
+from .bulk import DeltaSyncStats, delta_antientropy as _delta_antientropy
 from .network import SimNetwork, Unavailable
 from .replica import ReplicaNode
 from .version import Version, clocks_of, sync_versions, values_of
@@ -169,6 +170,31 @@ class KVCluster:
             for b in ids:
                 if a != b and self.network.reachable(a, b):
                     self.antientropy(a, b)
+
+    def delta_antientropy(self, src: str, dst: str, *,
+                          use_kernel: bool = False,
+                          max_ranges: Optional[int] = None) -> DeltaSyncStats:
+        """Two-phase delta round (paper §4.1 anti-entropy, DESIGN.md §6):
+        digest exchange, then only the divergent key ranges travel."""
+        if not self.network.reachable(src, dst):
+            raise Unavailable(f"{src} -> {dst} unreachable")
+        return _delta_antientropy(self.nodes[src], self.nodes[dst],
+                                  use_kernel=use_kernel,
+                                  max_ranges=max_ranges)
+
+    def delta_antientropy_round(self, *, use_kernel: bool = False,
+                                max_ranges: Optional[int] = None
+                                ) -> List[DeltaSyncStats]:
+        """One delta push round between all reachable pairs; converged pairs
+        cost one digest compare and move zero payload bytes."""
+        stats = []
+        ids = list(self.nodes)
+        for a in ids:
+            for b in ids:
+                if a != b and self.network.reachable(a, b):
+                    stats.append(self.delta_antientropy(
+                        a, b, use_kernel=use_kernel, max_ranges=max_ranges))
+        return stats
 
     # -- introspection ----------------------------------------------------------
     def siblings(self, key: str) -> Dict[str, int]:

@@ -26,10 +26,21 @@ replica/key interning tables — so a full round is: one column remap
 (vectorized gather), one grouped scatter, one ``sync_mask`` evaluation
 (jnp or the fused Pallas kernel), one masked write-back.  No per-key DVV
 object is created anywhere on that path.
+
+Steady-state rounds are *delta* rounds (DESIGN.md §6): the store keeps an
+incremental digest tree — every live slot owns a canonical 64-bit hash
+(independent of column order, slot order and trailing zero columns), and
+each of ``n_buckets`` key ranges holds the xor-fold of its slots' hashes,
+updated in O(changed slots) on insert/kill (compaction moves slots but not
+set membership, so digests are untouched).  Two replicas exchange
+``StoreDigest`` snapshots, diff them down the tree, and ship only the
+divergent buckets via ``payload(key_ranges=...)`` — wire and compute
+proportional to divergence, not store size.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import hashlib
+from dataclasses import dataclass
 from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -42,6 +53,113 @@ NO_DOT = B.NO_DOT
 
 _INITIAL_SLOTS = 64
 _INITIAL_REPLICAS = 4
+_INITIAL_KEYS = 64
+
+DIGEST_BUCKETS = 256          # initial leaf key-ranges of the digest tree
+DIGEST_FANOUT = 16            # children per internal tree node
+_SLOTS_PER_BUCKET = 4         # growth trigger: live slots per leaf
+_MAX_BUCKETS = 1 << 20
+_BUCKET_GROWTH = 4            # widen by 4x so rebuilds amortize
+
+_U64 = np.uint64
+_GOLD = _U64(0x9E3779B97F4A7C15)    # splitmix64 increment
+_DOT_SALT = _U64(0xD07D07D07D07D07D)
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer, vectorized over uint64 arrays (wraps mod 2^64)."""
+    with np.errstate(over="ignore"):
+        x = (np.asarray(x, _U64) + _GOLD)
+        x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+        return x ^ (x >> _U64(31))
+
+
+def _hash_str(s: str) -> int:
+    """Stable (process-independent) 64-bit hash of an interning-table entry."""
+    return int.from_bytes(
+        hashlib.blake2b(s.encode(), digest_size=8).digest(), "little")
+
+
+def key_bucket(key: str, n_buckets: int = DIGEST_BUCKETS) -> int:
+    """The digest leaf a key belongs to — a pure function of the key string,
+    so every replica assigns identical ranges regardless of interning order."""
+    return _hash_str(key) & (n_buckets - 1)
+
+
+@dataclass(frozen=True)
+class StoreDigest:
+    """A digest-tree snapshot: ``leaves[b]`` is the xor-fold of the canonical
+    slot hashes of every live version whose key falls in bucket ``b``.
+
+    Equal content ⇒ equal digests; the converse holds up to 64-bit hash
+    collisions (the full-payload round remains the correctness fallback —
+    see the collision probe in tests/test_delta_sync.py).
+
+    Widths are powers of two and *foldable*: because a key's bucket is
+    ``hash & (W − 1)``, xor-folding a 2W-wide leaf vector in half yields
+    exactly the W-wide digest of the same store, so trees of different
+    widths (stores grow their width with size) diff at the narrower one.
+    """
+
+    leaves: np.ndarray                      # uint64[n_buckets]
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.leaves.shape[0])
+
+    def fold(self, width: int) -> "StoreDigest":
+        """Exact down-projection to a narrower power-of-two width."""
+        if width == self.n_buckets:
+            return self
+        if width > self.n_buckets or self.n_buckets % width:
+            raise ValueError(
+                f"cannot fold {self.n_buckets} leaves to width {width}")
+        return StoreDigest(np.bitwise_xor.reduce(
+            self.leaves.reshape(-1, width), axis=0))
+
+    @property
+    def root(self) -> int:
+        return int(np.bitwise_xor.reduce(self.leaves)) if len(self.leaves) \
+            else 0
+
+    def levels(self) -> List[np.ndarray]:
+        """Root-first xor-fold levels with fanout ``DIGEST_FANOUT``."""
+        lvls = [self.leaves]
+        while len(lvls[0]) > 1:
+            a = lvls[0]
+            pad = (-len(a)) % DIGEST_FANOUT
+            if pad:
+                a = np.pad(a, (0, pad))
+            lvls.insert(0, np.bitwise_xor.reduce(
+                a.reshape(-1, DIGEST_FANOUT), axis=1))
+        return lvls
+
+    def nbytes(self) -> int:
+        """Phase-1 wire cost of shipping this digest (leaves + root)."""
+        return int(self.leaves.nbytes) + 8
+
+    def diff(self, other: "StoreDigest") -> np.ndarray:
+        """Leaf buckets whose content differs, found by tree descent.
+
+        Compares root first (the converged fast path is one 8-byte check),
+        then only the children of differing internal nodes.  Mismatched
+        widths are folded to the narrower side first; returned bucket ids
+        are at that common width.
+        """
+        width = min(self.n_buckets, other.n_buckets)
+        if self.n_buckets != other.n_buckets:
+            return self.fold(width).diff(other.fold(width))
+        mine, theirs = self.levels(), other.levels()
+        cand = np.flatnonzero(mine[0] != theirs[0])
+        for lvl in range(1, len(mine)):
+            if len(cand) == 0:
+                return cand
+            children = (cand[:, None] * DIGEST_FANOUT
+                        + np.arange(DIGEST_FANOUT)).ravel()
+            children = children[children < len(mine[lvl])]
+            cand = children[mine[lvl][children] != theirs[lvl][children]]
+        return cand
 
 
 @dataclass
@@ -74,13 +192,26 @@ class PackedPayload:
     def __len__(self) -> int:
         return int(self.vv.shape[0])
 
+    def nbytes(self) -> int:
+        """Wire size estimate: clock arrays + interning tables + values
+        (values priced at their repr, the sim-transport's serialization)."""
+        arrays = (self.vv.nbytes + self.dot_id.nbytes + self.dot_n.nbytes
+                  + self.key_ix.nbytes)
+        tables = (sum(len(k.encode()) for k in self.keys)
+                  + sum(len(r.encode()) for r in self.replica_ids))
+        values = sum(len(repr(v).encode()) for v in self.values)
+        return int(arrays + tables + values)
+
 
 class PackedVersionStore:
     """The resident packed store.  All mutation is numpy; bulk merges hand
     one [N, K, R] tensor to ``core.batched.sync_mask`` or the fused Pallas
     kernel (``kernels.dvv_ops.dvv_sync_mask``)."""
 
-    def __init__(self) -> None:
+    def __init__(self, n_buckets: int = DIGEST_BUCKETS, *,
+                 track_digests: bool = True) -> None:
+        if n_buckets & (n_buckets - 1):
+            raise ValueError("n_buckets must be a power of two")
         self.vv = np.zeros((_INITIAL_SLOTS, _INITIAL_REPLICAS), np.int32)
         self.dot_id = np.full(_INITIAL_SLOTS, NO_DOT, np.int32)
         self.dot_n = np.zeros(_INITIAL_SLOTS, np.int32)
@@ -94,6 +225,18 @@ class PackedVersionStore:
         self.keys: List[str] = []
         self._key_index: Dict[str, int] = {}
         self._slots_by_key: Dict[int, List[int]] = {}
+        # digest state: canonical per-slot hashes + per-bucket xor-folds and
+        # live counts.  track_digests=False skips incremental upkeep (for
+        # throwaway staging stores that never serve a delta round);
+        # sync_digest()/bucket_counts() then rebuild from content on demand.
+        self.n_buckets = n_buckets
+        self.track_digests = track_digests
+        self.slot_hash = np.zeros(_INITIAL_SLOTS, _U64)
+        self.digest = np.zeros(n_buckets, _U64)
+        self._bucket_live = np.zeros(n_buckets, np.int64)
+        self._replica_hash: List[int] = []            # aligned with replica_ids
+        self._key_hash = np.zeros(_INITIAL_KEYS, _U64)    # aligned with keys
+        self._key_bucket = np.zeros(_INITIAL_KEYS, np.int32)
 
     # -- interning / growth ------------------------------------------------
 
@@ -107,6 +250,7 @@ class PackedVersionStore:
             ix = len(self.replica_ids)
             self.replica_ids.append(r)
             self._replica_index[r] = ix
+            self._replica_hash.append(_hash_str(r))
             if ix >= self.vv.shape[1]:
                 grow = max(self.vv.shape[1], 4)
                 self.vv = np.pad(self.vv, ((0, 0), (0, grow)))
@@ -119,6 +263,13 @@ class PackedVersionStore:
             self.keys.append(k)
             self._key_index[k] = ix
             self._slots_by_key[ix] = []
+            if ix >= len(self._key_hash):
+                grow = len(self._key_hash)
+                self._key_hash = np.pad(self._key_hash, (0, grow))
+                self._key_bucket = np.pad(self._key_bucket, (0, grow))
+            h = _hash_str(k)
+            self._key_hash[ix] = h
+            self._key_bucket[ix] = h & (self.n_buckets - 1)
         return ix
 
     def _ensure_capacity(self, extra: int) -> None:
@@ -133,10 +284,16 @@ class PackedVersionStore:
         self.dot_n = np.pad(self.dot_n, (0, pad))
         self.key_ix = np.pad(self.key_ix, (0, pad), constant_values=-1)
         self.valid = np.pad(self.valid, (0, pad))
+        self.slot_hash = np.pad(self.slot_hash, (0, pad))
         self.values.extend([None] * pad)
 
     def compact(self, *, force: bool = False) -> None:
-        """Reclaim dead slots (stable order) when they outnumber live ones."""
+        """Reclaim dead slots (stable order) when they outnumber live ones.
+
+        Digests are untouched: compaction moves slots without changing the
+        live set.  The per-key slot-list remap is one old→new index array
+        (per-key lists only ever hold live slots, so every entry remaps).
+        """
         live = self.n_slots - self.n_dead   # both counters are maintained
         if not force and self.n_dead <= max(live, _INITIAL_SLOTS):
             return
@@ -146,16 +303,24 @@ class PackedVersionStore:
         self.dot_id[:n] = self.dot_id[keep]
         self.dot_n[:n] = self.dot_n[keep]
         self.key_ix[:n] = self.key_ix[keep]
+        self.slot_hash[:n] = self.slot_hash[keep]
         self.values[:n] = [self.values[s] for s in keep]
         self.valid[:n] = True
         self.valid[n:] = False
         self.key_ix[n:] = -1
         self.values[n:] = [None] * (len(self.values) - n)
+        remap = np.full(self.n_slots, -1, np.int64)
+        remap[keep] = np.arange(n)
         self.n_slots = n
         self.n_dead = 0
-        remap = {int(old): new for new, old in enumerate(keep)}
         for kix, slots in self._slots_by_key.items():
-            self._slots_by_key[kix] = [remap[s] for s in slots if s in remap]
+            if slots:
+                new = remap[np.asarray(slots)]
+                # lists must only ever hold live slots (kills prune them);
+                # a -1 here means a kill path forgot to, which would
+                # corrupt version sets silently downstream — fail loudly.
+                assert (new >= 0).all(), (kix, slots)
+                self._slots_by_key[kix] = new.tolist()
 
     # -- slot accessors ----------------------------------------------------
 
@@ -192,6 +357,118 @@ class PackedVersionStore:
         plain = vv > 0
         dotted = (dot_id[:, None] == ar) & (dot_n[:, None] > 0)
         return int(2 * (plain & ~dotted).sum() + 3 * dotted.sum())
+
+    # -- digest tree (delta anti-entropy, DESIGN.md §6) --------------------
+
+    def _slot_hash_rows(self, vv: np.ndarray, dot_id: np.ndarray,
+                        dot_n: np.ndarray, kix: np.ndarray) -> np.ndarray:
+        """Canonical 64-bit hash per (clock, key) row, vectorized.
+
+        The hash folds per-replica contributions keyed by the *replica-id
+        string hash* (never the column index) with XOR, so it is invariant
+        under column permutation, interning order and trailing zero columns
+        — two replicas holding the same version of the same key always
+        agree, whatever their universes look like.
+        """
+        vv = np.asarray(vv, np.int64)
+        M, R = vv.shape
+        rh = np.asarray(self._replica_hash[:R], _U64) if R else \
+            np.zeros(0, _U64)
+        with np.errstate(over="ignore"):
+            if R:
+                contrib = _mix64(rh[None, :] ^ (vv.astype(_U64) * _GOLD))
+                contrib = np.where(vv > 0, contrib, _U64(0))
+                h = np.bitwise_xor.reduce(contrib, axis=1)
+            else:
+                h = np.zeros(M, _U64)
+            has_dot = np.asarray(dot_id) != NO_DOT
+            safe = np.clip(dot_id, 0, max(R - 1, 0))
+            dot_rh = rh[safe] if R else np.zeros(M, _U64)
+            dot_h = _mix64(dot_rh ^ (np.asarray(dot_n, _U64) * _GOLD)
+                           ^ _DOT_SALT)
+            h ^= np.where(has_dot, dot_h, _U64(0))
+            return _mix64(h ^ self._key_hash[np.asarray(kix)])
+
+    def _digest_kill(self, slots: np.ndarray) -> None:
+        """Remove ``slots`` from their buckets (xor out + live-count down)."""
+        if not self.track_digests or not len(slots):
+            return
+        s = np.asarray(slots)
+        b = self._key_bucket[self.key_ix[s]]
+        np.bitwise_xor.at(self.digest, b, self.slot_hash[s])
+        np.subtract.at(self._bucket_live, b, 1)
+
+    def sync_digest(self) -> StoreDigest:
+        """Snapshot the digest tree — phase 1 of a delta round.
+
+        On a ``track_digests=False`` store this rebuilds from content first
+        (O(live); such stores are staging scratch, not protocol peers)."""
+        if not self.track_digests:
+            self.rebuild_digests()
+        return StoreDigest(self.digest.copy())
+
+    def bucket_counts(self, width: Optional[int] = None) -> np.ndarray:
+        """Live slots per bucket at ``width`` (default: this store's) — the
+        ranking signal for divergent-range requests (big ranges first).
+        Maintained incrementally alongside the digests, so a delta round's
+        ranking never sweeps the slot arrays."""
+        width = width or self.n_buckets
+        if not self.track_digests:
+            live = self.valid[: self.n_slots]
+            b = self._key_bucket[self.key_ix[: self.n_slots]] & (width - 1)
+            return np.bincount(b[live], minlength=width)
+        if width == self.n_buckets:
+            return self._bucket_live.copy()
+        return self._bucket_live.reshape(-1, width).sum(axis=0)
+
+    def _maybe_grow_buckets(self) -> None:
+        """Keep ~``_SLOTS_PER_BUCKET`` live slots per leaf: widen the tree
+        as the store grows so delta-round granularity tracks store size.
+        The O(live) digest rebuild amortizes over the inserts that
+        triggered it; peers at the old width still diff via folding."""
+        live = self.n_slots - self.n_dead
+        grew = False
+        while (live > self.n_buckets * _SLOTS_PER_BUCKET
+               and self.n_buckets < _MAX_BUCKETS):
+            self.n_buckets *= _BUCKET_GROWTH
+            grew = True
+        if grew:
+            n = len(self.keys)
+            self._key_bucket[:n] = (
+                self._key_hash[:n] & _U64(self.n_buckets - 1)).astype(np.int32)
+            if self.track_digests:
+                self.rebuild_digests()
+
+    def rebuild_digests(self) -> np.ndarray:
+        """Recompute buckets and live counts from slot content (in place).
+
+        The incremental state must always equal this recomputation —
+        ``check_digests`` asserts it in tests; calling this repairs a store
+        whose digest state was corrupted (e.g. the collision probe).
+        """
+        live = np.flatnonzero(self.valid[: self.n_slots])
+        R = self.n_replicas
+        self.digest = np.zeros(self.n_buckets, _U64)
+        self._bucket_live = np.zeros(self.n_buckets, np.int64)
+        if len(live):
+            kixs = self.key_ix[live]
+            hashes = self._slot_hash_rows(
+                self.vv[live, :R], self.dot_id[live], self.dot_n[live], kixs)
+            self.slot_hash[live] = hashes
+            buckets = self._key_bucket[kixs]
+            np.bitwise_xor.at(self.digest, buckets, hashes)
+            np.add.at(self._bucket_live, buckets, 1)
+        return self.digest
+
+    def check_digests(self) -> bool:
+        """True iff the incremental digest state matches a full recompute."""
+        saved = (self.digest, self.slot_hash.copy(), self._bucket_live)
+        try:
+            rebuilt = self.rebuild_digests()
+            return (np.array_equal(rebuilt, saved[0])
+                    and np.array_equal(self._bucket_live, saved[2]))
+        finally:
+            self.digest, self.slot_hash, self._bucket_live = saved
 
     # -- boundary codec (object clocks at the client API edge only) --------
 
@@ -237,11 +514,19 @@ class PackedVersionStore:
         self.values[s] = value
         self.n_slots += 1
         self._slots_by_key.setdefault(kix, []).append(s)
+        if self.track_digests:
+            R = self.n_replicas
+            self.slot_hash[s] = self._slot_hash_rows(
+                self.vv[s: s + 1, :R], self.dot_id[s: s + 1],
+                self.dot_n[s: s + 1], self.key_ix[s: s + 1])[0]
+            self.digest[self._key_bucket[kix]] ^= self.slot_hash[s]
+            self._bucket_live[self._key_bucket[kix]] += 1
         return s
 
     def _kill_slots(self, kix: int, dead: Sequence[int]) -> None:
         if not len(dead):
             return
+        self._digest_kill(np.asarray(dead))
         self.valid[np.asarray(dead)] = False
         self.n_dead += len(dead)
         deadset = set(int(d) for d in dead)
@@ -287,6 +572,7 @@ class PackedVersionStore:
                                   int(inc_dot_n[j]), inc_values[j])
                 changed = True
         self.compact()
+        self._maybe_grow_buckets()
         return changed
 
     def sync_key_objects(self, key: str, versions: Iterable[Version]) -> bool:
@@ -349,13 +635,37 @@ class PackedVersionStore:
 
     # -- bulk anti-entropy (the hot path: arrays in, arrays out) -----------
 
-    def payload(self, keys: Optional[Iterable[str]] = None) -> PackedPayload:
+    def payload(self, keys: Optional[Iterable[str]] = None, *,
+                key_ranges: Optional[Sequence[int]] = None,
+                ranges_width: Optional[int] = None) -> PackedPayload:
         """Extract the live slots for ``keys`` (default: all) as one payload.
 
-        Pure array slicing — zero object decode.
+        ``key_ranges`` selects by digest bucket instead: only live slots
+        whose key hashes into one of the given buckets are shipped — the
+        phase-2 slice of a delta round.  ``ranges_width`` interprets the
+        bucket ids at a narrower power-of-two width (a peer with a smaller
+        tree; must divide this store's width).  Pure array slicing — zero
+        object decode either way.
         """
         R = self.n_replicas
-        if keys is None:
+        if keys is not None and key_ranges is not None:
+            raise ValueError("pass keys or key_ranges, not both")
+        if key_ranges is not None:
+            width = ranges_width or self.n_buckets
+            if width > self.n_buckets or self.n_buckets % width:
+                raise ValueError(
+                    f"ranges_width {width} incompatible with "
+                    f"{self.n_buckets} buckets")
+            sel = np.zeros(width, bool)
+            sel[np.asarray(list(key_ranges), np.int64)] = True
+            live = self.valid[: self.n_slots]
+            in_range = sel[self._key_bucket[self.key_ix[: self.n_slots]]
+                           & (width - 1)]
+            rows = np.flatnonzero(live & in_range)
+            uniq, inv = np.unique(self.key_ix[rows], return_inverse=True)
+            sel_keys = [self.keys[int(kx)] for kx in uniq]
+            out_kix = inv.astype(np.int32)
+        elif keys is None:
             rows = np.flatnonzero(self.valid[: self.n_slots])
             kixs = self.key_ix[rows]
             sel_keys = self.keys
@@ -477,6 +787,7 @@ class PackedVersionStore:
             loc_keep = mask[loc_group, loc_pos]
             dead_rows = loc_rows[~loc_keep]
             if len(dead_rows):
+                self._digest_kill(dead_rows)
                 self.valid[dead_rows] = False
                 self.n_dead += len(dead_rows)
                 dead_set = set(dead_rows.tolist())
@@ -502,6 +813,14 @@ class PackedVersionStore:
             kix_new = key_ixs[groups_new]
             self.key_ix[dst] = kix_new
             self.valid[dst] = True
+            if self.track_digests:
+                new_hashes = self._slot_hash_rows(
+                    inc_vv[new_rows], inc_did[new_rows], inc_dn[new_rows],
+                    kix_new)
+                self.slot_hash[dst] = new_hashes
+                new_buckets = self._key_bucket[kix_new]
+                np.bitwise_xor.at(self.digest, new_buckets, new_hashes)
+                np.add.at(self._bucket_live, new_buckets, 1)
             for i, row in enumerate(new_rows):
                 self.values[s0 + i] = payload.values[int(row)]
                 self._slots_by_key[int(kix_new[i])].append(s0 + i)
@@ -509,12 +828,14 @@ class PackedVersionStore:
             changed_groups[groups_new] = True
 
         self.compact()
+        self._maybe_grow_buckets()
         return int(changed_groups.sum())
 
     # -- misc ---------------------------------------------------------------
 
     def clone(self) -> "PackedVersionStore":
-        out = PackedVersionStore()
+        out = PackedVersionStore(n_buckets=self.n_buckets,
+                                 track_digests=self.track_digests)
         out.vv = self.vv.copy()
         out.dot_id = self.dot_id.copy()
         out.dot_n = self.dot_n.copy()
@@ -528,6 +849,12 @@ class PackedVersionStore:
         out.keys = list(self.keys)
         out._key_index = dict(self._key_index)
         out._slots_by_key = {k: list(v) for k, v in self._slots_by_key.items()}
+        out.slot_hash = self.slot_hash.copy()
+        out.digest = self.digest.copy()
+        out._bucket_live = self._bucket_live.copy()
+        out._replica_hash = list(self._replica_hash)
+        out._key_hash = self._key_hash.copy()
+        out._key_bucket = self._key_bucket.copy()
         return out
 
     def __repr__(self) -> str:
