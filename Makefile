@@ -1,15 +1,19 @@
 # Single gate every PR runs. `make test` is the tier-1 command from
 # ROADMAP.md (pytest.ini deselects `slow`-marked fuzz phases by default);
-# `make test-all` runs everything including the slow phases. `bench-smoke`
-# exercises the benchmark harness at toy sizes; `bench-delta` runs the full
-# divergence sweep and writes BENCH_delta_sync.json; `lint` is a
+# `make test-all` runs everything including the slow phases;
+# `make test-property` runs only the hypothesis property suites (their
+# dedicated lane). `bench-smoke` exercises the benchmark harness at toy
+# sizes; `bench-delta` runs the full divergence sweep and writes
+# BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
+# looped client calls and writes BENCH_client_api.json; `lint` is a
 # dependency-free syntax/bytecode pass (the container has no flake8/ruff
 # baked in).
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench-smoke bench bench-delta lint check
+.PHONY: test test-all test-property bench-smoke bench bench-delta \
+	bench-client lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -17,12 +21,17 @@ test:
 test-all:
 	$(PY) -m pytest -q -m ""
 
+test-property:
+	$(PY) -m pytest -q -m property
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
 	$(PY) -c "from benchmarks.delta_bench import delta_sync_rows; \
 	          print('\n'.join(delta_sync_rows((256,), (0.05,), \
 	          json_path=None, reps=1)))"
+	$(PY) -c "from benchmarks.client_bench import client_api_rows; \
+	          print('\n'.join(client_api_rows((64,), json_path=None, reps=1)))"
 
 bench:
 	$(PY) -m benchmarks.run
@@ -30,6 +39,9 @@ bench:
 bench-delta:
 	$(PY) -c "from benchmarks.delta_bench import delta_sync_rows; \
 	          print('\n'.join(delta_sync_rows()))"
+
+bench-client:
+	$(PY) -m benchmarks.client_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

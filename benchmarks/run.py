@@ -15,13 +15,15 @@ import sys
 
 
 def main() -> None:
-    from . import delta_bench, kernel_bench, paper_figures, scalability
+    from . import client_bench, delta_bench, kernel_bench, paper_figures, \
+        scalability
 
     rows = []
     rows += paper_figures.rows()
     rows += scalability.rows()
     rows += kernel_bench.rows()
     rows += delta_bench.rows()
+    rows += client_bench.rows()
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -10,19 +10,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import DVV_MECHANISM
-from repro.store import KVCluster, SimNetwork
+from repro.store import KVClient, KVCluster, SimNetwork
 
 # --- 1. the paper: concurrent writes through ONE coordinator survive -------
 store = KVCluster(("a", "b"), DVV_MECHANISM, network=SimNetwork(seed=0))
-store.put("config", "v-from-client1", coordinator="b", client_id="c1")
-store.put("config", "v-from-client2", coordinator="b", client_id="c2")
-got = store.get("config", via="b")
+c1 = KVClient(store, "c1", via="b")
+c2 = KVClient(store, "c2", via="b")
+c1.put("config", "v-from-client1")
+c2.put("config", "v-from-client2")
+got = c1.get("config")
 print(f"siblings after same-coordinator concurrent puts: {got.values}")
 assert set(got.values) == {"v-from-client1", "v-from-client2"}
 
-# the client resolves with full causal context — resolution dominates both
-store.put("config", "merged", context=got.context, coordinator="b")
-print(f"after context write: {store.get('config', via='b').values}")
+# the client resolves with the opaque causal token — the resolution
+# supersedes both siblings (see examples/shopping_cart.py for the full
+# session walkthrough: token bytes, batched put_many, ...)
+c1.put("config", "merged", context=got.context)
+print(f"after context write: {c1.get('config').values}")
 
 # --- 2. a model from the zoo -------------------------------------------------
 from repro.configs import get_config

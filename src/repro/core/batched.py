@@ -122,6 +122,26 @@ def sync_mask_np(vvs: np.ndarray, dot_ids: np.ndarray, dot_ns: np.ndarray,
     return valid & ~dominated
 
 
+def grouped_ceil_at_np(vv_at_r: np.ndarray, dot_ids: np.ndarray,
+                       dot_ns: np.ndarray, groups: np.ndarray,
+                       n_groups: int, r_index: int) -> np.ndarray:
+    """⌈S⌉_r per *group* over stacked clock rows — the batched twin of
+    ``effective_ceil_np`` used by multi-key PUT minting.
+
+    ``vv_at_r`` is the r-column of each row's vv; ``groups`` assigns each
+    row to one of ``n_groups`` keys.  One ``np.maximum.at`` scatter per
+    signal — no per-key Python loop.
+    """
+    out = np.zeros(n_groups, np.int32)
+    if len(vv_at_r):
+        np.maximum.at(out, groups, vv_at_r.astype(np.int32))
+        at_r = np.asarray(dot_ids) == r_index
+        if at_r.any():
+            np.maximum.at(out, np.asarray(groups)[at_r],
+                          np.asarray(dot_ns, np.int32)[at_r])
+    return out
+
+
 def effective_ceil_np(vvs: np.ndarray, dot_ids: np.ndarray,
                       dot_ns: np.ndarray, r_index: int) -> int:
     """⌈S⌉_r over a clock set given as arrays: max of vv[:, r] and any dot at r."""

@@ -1,13 +1,16 @@
 """Replicated key-value store (paper §4.1) over a simulated network."""
 from .bulk import DeltaSyncStats, delta_antientropy
+from .client import KVClient
 from .cluster import GetResult, KVCluster, PutAck
+from .context import CausalContext, EMPTY_CONTEXT
 from .network import SimNetwork, Unavailable
 from .packed import PackedPayload, PackedVersionStore, StoreDigest, key_bucket
 from .replica import ReplicaNode
 from .version import Version, clocks_of, sync_versions, values_of
 
 __all__ = [
-    "KVCluster", "GetResult", "PutAck",
+    "KVCluster", "KVClient", "GetResult", "PutAck",
+    "CausalContext", "EMPTY_CONTEXT",
     "SimNetwork", "Unavailable",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
     "PackedVersionStore", "PackedPayload",

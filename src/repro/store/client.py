@@ -1,0 +1,80 @@
+"""KVClient — the client session layer over ``KVCluster`` (paper §4.1).
+
+The paper's client workflow is GET → (values, opaque context) → PUT with
+that context.  ``KVClient`` packages the session state that workflow needs
+— the client id, the monotone per-session counter (used by the §3
+per-client version-vector baselines; DVV ignores it), and session defaults
+(proxy node, quorums) — and adds the batched multi-key operations the
+single-key API cannot express efficiently:
+
+* ``get_many(keys)``     — one proxy round over many keys; on the packed
+  backend every key takes the zero-decode array read path.
+* ``put_many({k: (v, ctx)})`` — writes grouped by coordinator; each group
+  executes as ONE vectorized store update (``PackedVersionStore.
+  update_keys``: one grouped encode → one ``sync_mask`` sweep → one
+  scatter) and ONE replication payload per destination replica, instead of
+  K independent ``sync_key`` walks and K·(R−1) messages.
+
+Contexts are opaque ``CausalContext`` tokens; ``KVClient`` never inspects
+them, it only carries them — exactly the contract real Dynamo/Riak clients
+have with their vector-clock blobs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+from .cluster import GetResult, KVCluster, PutAck
+
+
+class KVClient:
+    """A client session: owns the client counter and session defaults."""
+
+    def __init__(self, cluster: KVCluster, client_id: str = "client", *,
+                 via: Optional[str] = None,
+                 read_quorum: Optional[int] = None,
+                 write_quorum: Optional[int] = None,
+                 use_kernel: bool = False):
+        self.cluster = cluster
+        self.client_id = client_id
+        self.via = via
+        self.read_quorum = read_quorum
+        self.write_quorum = write_quorum
+        self.use_kernel = use_kernel
+        self.counter = 0                 # session-monotone update counter
+
+    # -- single-key ---------------------------------------------------------
+
+    def get(self, key: str, *, via: Optional[str] = None,
+            quorum: Optional[int] = None) -> GetResult:
+        return self.cluster.get(key, via=via or self.via,
+                                quorum=quorum or self.read_quorum)
+
+    def put(self, key: str, value: Any, context: Any = None, *,
+            via: Optional[str] = None, quorum: Optional[int] = None,
+            coordinator: Optional[str] = None) -> PutAck:
+        """PUT with an opaque context token (or its ``bytes`` encoding).
+        ``context=None`` starts a fresh causal thread (blind write)."""
+        self.counter += 1
+        return self.cluster.put(
+            key, value, context, via=via or self.via,
+            client_id=self.client_id, client_counter=self.counter,
+            coordinator=coordinator, quorum=quorum or self.write_quorum)
+
+    # -- batched ------------------------------------------------------------
+
+    def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
+                 quorum: Optional[int] = None) -> Dict[str, GetResult]:
+        return self.cluster.get_many(keys, via=via or self.via,
+                                     quorum=quorum or self.read_quorum)
+
+    def put_many(self, items: Mapping[str, Tuple[Any, Any]], *,
+                 via: Optional[str] = None,
+                 quorum: Optional[int] = None) -> Dict[str, PutAck]:
+        """Batched PUT of ``{key: (value, context)}`` — distinct keys,
+        coordinator-grouped vectorized execution (see module docstring)."""
+        self.counter += len(items)
+        return self.cluster.put_many(
+            items, via=via or self.via, client_id=self.client_id,
+            client_counter=self.counter,
+            quorum=quorum or self.write_quorum,
+            use_kernel=self.use_kernel)

@@ -1,11 +1,15 @@
 """The replicated key-value store (paper §4.1): proxy → coordinator → quorum.
 
-GET:  proxy fans out to a read quorum of the key's replica nodes, reduces the
-      replies with ``sync`` and returns (values, opaque context).
+GET:  proxy fans out to a read quorum of the key's replica nodes, merges the
+      replies (on the packed backend: one array sweep, zero object-clock
+      decodes) and returns (values, opaque ``CausalContext`` token).
 PUT:  forwarded to a coordinator that is a replica node for the key; the
-      coordinator mints the clock with ``update``, syncs locally, then
-      replicates the resulting version set asynchronously (via SimNetwork)
-      to the remaining replicas; a write quorum is awaited synchronously.
+      coordinator mints the clock with ``update`` from the token's §5.4
+      ceiling, syncs locally, then replicates the resulting version set
+      asynchronously (via SimNetwork) to the remaining replicas; a write
+      quorum is awaited synchronously.  ``put_many`` batches same-
+      coordinator writes through one vectorized store update and one
+      replication payload per destination.
 
 Failures, partitions and delayed replication all flow through ``SimNetwork``
 so tests and the training runtime can inject them deterministically.
@@ -13,27 +17,46 @@ so tests and the training runtime can inject them deterministically.
 from __future__ import annotations
 
 import hashlib
+import random
 from dataclasses import dataclass
-from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core.kernel import Mechanism
 from .bulk import DeltaSyncStats, delta_antientropy as _delta_antientropy
+from .context import CausalContext
 from .network import SimNetwork, Unavailable
+from .packed import quorum_merge_key
 from .replica import ReplicaNode
-from .version import Version, clocks_of, sync_versions, values_of
+from .version import Version, clocks_of, resolution_key, sync_versions
+
+#: Default per-push range budget when gossip fanout sampling is active
+#: (`delta_antientropy_round(fanout=...)`); caps a single round's payload
+#: so steady-state gossip cost is bounded per tick.
+DELTA_RANGE_BUDGET = 64
 
 
 @dataclass(frozen=True)
 class GetResult:
     values: Tuple[Any, ...]
-    context: FrozenSet[Any]          # opaque clock set (paper §5.4)
+    context: CausalContext            # opaque causal token (paper §5.4)
     siblings: int                     # number of concurrent versions returned
+    # Per-value resolution keys (wall_time, clock, value), aligned with
+    # ``values`` — the documented total order behind ``value``.
+    resolution: Tuple[Tuple[float, str, str], ...] = ()
 
     @property
     def value(self) -> Any:
-        """Convenience for callers that expect a resolved register."""
+        """Deterministic resolved register: the sibling that is maximal in
+        the (wall_time, clock, value) total order — latest coordinator
+        wall-time wins; clock repr, then value repr, break exact ties.
+        Purely a client-side convenience: no causal information is lost
+        (all siblings stay in ``values``/``context``)."""
         if not self.values:
             return None
+        if len(self.resolution) == len(self.values):
+            best = max(range(len(self.values)),
+                       key=self.resolution.__getitem__)
+            return self.values[best]
         return self.values[-1]
 
 
@@ -51,7 +74,8 @@ class KVCluster:
                  replication: Optional[int] = None,
                  read_quorum: int = 1, write_quorum: int = 1,
                  network: Optional[SimNetwork] = None, seed: int = 0,
-                 packed: Optional[bool] = None):
+                 packed: Optional[bool] = None,
+                 delta_range_budget: int = DELTA_RANGE_BUDGET):
         if not node_ids:
             raise ValueError("need at least one node")
         self.mechanism = mechanism
@@ -65,13 +89,26 @@ class KVCluster:
         self.write_quorum = write_quorum
         self.network = network or SimNetwork(seed=seed)
         self.clock_time = 0.0
+        self.delta_range_budget = delta_range_budget
+        self._ring_cache: Dict[str, List[str]] = {}
+        # Seeded round-robin gossip schedule (delta_antientropy_round):
+        # per-node start offsets + a round counter, so repeated rounds cycle
+        # every node through every peer deterministically.
+        self._gossip_step = 0
+        n = len(node_ids)
+        self._gossip_offset = {
+            node: random.Random(seed * 1_000_003 + i).randrange(max(1, n - 1))
+            for i, node in enumerate(node_ids)}
 
     # -- placement (consistent-hash ring) -------------------------------------
     def replicas_for(self, key: str) -> List[str]:
-        ring = sorted(
-            self.nodes,
-            key=lambda n: hashlib.md5(f"{n}:{key}".encode()).hexdigest())
-        return ring[: self.replication]
+        cached = self._ring_cache.get(key)
+        if cached is None:
+            ring = sorted(
+                self.nodes,
+                key=lambda n: hashlib.md5(f"{n}:{key}".encode()).hexdigest())
+            cached = self._ring_cache[key] = ring[: self.replication]
+        return cached
 
     def _reachable_replicas(self, via: str, key: str) -> List[str]:
         reachable = [r for r in self.replicas_for(key)
@@ -80,6 +117,22 @@ class KVCluster:
         # first (how Riak/Dynamo coordinators behave).
         reachable.sort(key=lambda r: (r != via,))
         return reachable
+
+    def _pick_coordinator(self, proxy: str, key: str,
+                          coordinator: Optional[str] = None) -> str:
+        """A reachable replica node to coordinate a PUT (paper step 2)."""
+        if coordinator is not None:
+            if not self.network.reachable(proxy, coordinator):
+                raise Unavailable(f"coordinator {coordinator} unreachable")
+            return coordinator
+        candidates = [r for r in self.replicas_for(key)
+                      if self.network.reachable(proxy, r)]
+        if not candidates:
+            raise Unavailable(f"no reachable coordinator for {key!r}")
+        # Prefer coordinating at the proxy itself when it is a replica
+        # (local coordination preserves read-your-writes via one node).
+        candidates.sort(key=lambda r: (r != proxy,))
+        return candidates[0]
 
     # -- client operations -------------------------------------------------------
     def get(self, key: str, *, via: Optional[str] = None,
@@ -92,14 +145,40 @@ class KVCluster:
         if len(reachable) < quorum:
             raise Unavailable(
                 f"read quorum {quorum} unreachable for {key!r} via {proxy}")
-        acc: FrozenSet[Version] = frozenset()
-        for r in reachable[:max(quorum, 1)]:
-            acc = sync_versions(acc, self.nodes[r].versions(key),
+        chosen = [self.nodes[r] for r in reachable[:max(quorum, 1)]]
+        if all(n.is_packed for n in chosen):
+            # Array-native read path: quorum merge + §5.4 ceiling token
+            # straight from the int32 columns — zero object-clock decodes.
+            values, walls, ckeys, entries = quorum_merge_key(
+                [n.backend.packed for n in chosen], key)
+            order = sorted(range(len(values)),
+                           key=lambda i: (repr(values[i]), walls[i],
+                                          ckeys[i]))
+            return GetResult(
+                values=tuple(values[i] for i in order),
+                context=CausalContext(entries=entries),
+                siblings=len(values),
+                resolution=tuple((walls[i], ckeys[i], repr(values[i]))
+                                 for i in order))
+        acc = frozenset()
+        for node in chosen:
+            acc = sync_versions(acc, node.versions(key),
                                 total_order=not self.mechanism.tracks_concurrency)
-        return GetResult(values=values_of(acc), context=clocks_of(acc),
-                         siblings=len(acc))
+        ordered = sorted(acc, key=lambda v: (repr(v.value), v.wall,
+                                             repr(v.clock)))
+        return GetResult(
+            values=tuple(v.value for v in ordered),
+            context=CausalContext.from_clocks(clocks_of(acc)),
+            siblings=len(acc),
+            resolution=tuple(resolution_key(v) for v in ordered))
 
-    def put(self, key: str, value: Any, context: FrozenSet[Any] = frozenset(),
+    def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
+                 quorum: Optional[int] = None) -> Dict[str, GetResult]:
+        """Multi-key GET through one proxy; each key takes the same quorum
+        path as ``get`` (packed backends: zero object-clock decodes)."""
+        return {k: self.get(k, via=via, quorum=quorum) for k in keys}
+
+    def put(self, key: str, value: Any, context: Any = None,
             *, via: Optional[str] = None, client_id: str = "?",
             client_counter: int = 0, wall_time: Optional[float] = None,
             coordinator: Optional[str] = None,
@@ -111,31 +190,22 @@ class KVCluster:
         self.clock_time += 1.0
         wall = self.clock_time if wall_time is None else wall_time
 
-        replicas = self.replicas_for(key)
-        # pick a coordinator that is a reachable replica node (paper step 2)
-        if coordinator is None:
-            candidates = [r for r in replicas if self.network.reachable(proxy, r)]
-            if not candidates:
-                raise Unavailable(f"no reachable coordinator for {key!r}")
-            # Prefer coordinating at the proxy itself when it is a replica
-            # (local coordination preserves read-your-writes via one node).
-            candidates.sort(key=lambda r: (r != proxy,))
-            coordinator = candidates[0]
-        elif not self.network.reachable(proxy, coordinator):
-            raise Unavailable(f"coordinator {coordinator} unreachable")
-
+        ctx = CausalContext.coerce(context)
+        coordinator = self._pick_coordinator(proxy, key, coordinator)
         node = self.nodes[coordinator]
         version = node.coordinate_update(
-            key, value, context, client_id=client_id,
+            key, value, ctx, client_id=client_id,
             client_counter=client_counter, wall_time=wall)
-        s_c = node.versions(key)
 
-        # replicate S_C' to the other replicas (paper step 4): async messages
+        # replicate S_C' to the other replicas (paper step 4): async
+        # messages carrying the wire payload (packed: int32 arrays, no
+        # object clocks on the control plane either)
+        payload = node.antientropy_payload([key])
         acked = [coordinator]
-        for r in replicas:
+        for r in self.replicas_for(key):
             if r == coordinator:
                 continue
-            sent = self.network.send(coordinator, r, ("store", key, s_c))
+            sent = self.network.send(coordinator, r, ("store", payload))
             if sent:
                 acked.append(r)
         if len(acked) < quorum:
@@ -146,13 +216,90 @@ class KVCluster:
         return PutAck(clock=version.clock, coordinator=coordinator,
                       replicated_to=tuple(acked))
 
+    def put_many(self, items: Mapping[str, Tuple[Any, Any]], *,
+                 via: Optional[str] = None, client_id: str = "?",
+                 client_counter: int = 0, quorum: Optional[int] = None,
+                 use_kernel: bool = False) -> Dict[str, PutAck]:
+        """Batched multi-key PUT: ``{key: (value, context)}`` → per-key acks.
+
+        Keys are grouped by coordinator; each same-coordinator group runs
+        as ONE vectorized store update (one grouped encode → one
+        ``sync_mask`` sweep → one scatter) and ONE replication payload per
+        destination replica, instead of K independent ``sync_key`` walks
+        and K·(R−1) messages.  Admission is atomic: if any key has no
+        reachable coordinator, nothing is written.  Writes are always
+        durable at their coordinators; if any key then misses its write
+        quorum, ``Unavailable`` is raised after the batch is applied
+        (mirroring the single-key contract).
+        """
+        proxy = via or next(iter(self.nodes))
+        if proxy in self.network.down:
+            raise Unavailable(f"proxy {proxy} is down")
+        quorum = quorum or self.write_quorum
+
+        groups: Dict[str, List[str]] = {}
+        ctxs: Dict[str, CausalContext] = {}
+        walls: Dict[str, float] = {}
+        coord_of: Dict[str, str] = {}
+        for key, (value, context) in items.items():
+            ctxs[key] = CausalContext.coerce(context)
+            coord = self._pick_coordinator(proxy, key)
+            coord_of[key] = coord
+            groups.setdefault(coord, []).append(key)
+        minted: Dict[str, Version] = {}
+        acked: Dict[str, List[str]] = {}
+        mask_fn = None
+        if use_kernel:
+            from ..kernels.dvv_ops import dvv_sync_mask_bucketed
+            mask_fn = dvv_sync_mask_bucketed
+        for key in items:
+            self.clock_time += 1.0
+            walls[key] = self.clock_time
+        for coord, keys in groups.items():
+            node = self.nodes[coord]
+            batch = [(k, ctxs[k], items[k][0], walls[k]) for k in keys]
+            versions = node.coordinate_updates(
+                batch, client_id=client_id, client_counter=client_counter,
+                mask_fn=mask_fn)
+            for k, v in zip(keys, versions):
+                minted[k] = v
+                acked[k] = [coord]
+            # One replication payload per destination: all of this
+            # coordinator's keys that destination replicates.
+            dst_keys: Dict[str, List[str]] = {}
+            for k in keys:
+                for r in self.replicas_for(k):
+                    if r != coord:
+                        dst_keys.setdefault(r, []).append(k)
+            # Destinations replicating the same key set share one payload
+            # object (receivers never mutate payloads; single-key put
+            # already relies on this).
+            payload_cache: Dict[Tuple[str, ...], Any] = {}
+            for dst, ks in dst_keys.items():
+                sig = tuple(ks)
+                payload = payload_cache.get(sig)
+                if payload is None:
+                    payload = payload_cache[sig] = \
+                        node.antientropy_payload(ks)
+                if self.network.send(coord, dst, ("store", payload)):
+                    for k in ks:
+                        acked[k].append(dst)
+        failed = [k for k in items if len(acked[k]) < quorum]
+        if failed:
+            raise Unavailable(
+                f"write quorum {quorum} unreachable for "
+                f"{len(failed)}/{len(items)} keys (e.g. {failed[:3]})")
+        return {k: PutAck(clock=minted[k].clock, coordinator=coord_of[k],
+                          replicated_to=tuple(acked[k]))
+                for k in items}
+
     # -- background machinery ------------------------------------------------------
     def deliver_replication(self, max_messages: Optional[int] = None) -> int:
         """Flush queued coordinator→replica store messages."""
         def handler(msg):
-            kind, key, versions = msg.payload
+            kind, payload = msg.payload
             assert kind == "store"
-            self.nodes[msg.dst].apply_sync(key, versions)
+            self.nodes[msg.dst].receive_antientropy(payload)
         return self.network.deliver(handler, max_messages=max_messages)
 
     def antientropy(self, src: str, dst: str,
@@ -183,15 +330,37 @@ class KVCluster:
                                   max_ranges=max_ranges)
 
     def delta_antientropy_round(self, *, use_kernel: bool = False,
-                                max_ranges: Optional[int] = None
+                                max_ranges: Optional[int] = None,
+                                fanout: Optional[int] = None
                                 ) -> List[DeltaSyncStats]:
-        """One delta push round between all reachable pairs; converged pairs
-        cost one digest compare and move zero payload bytes."""
-        stats = []
+        """One seeded round-robin delta push round (gossip scheduling).
+
+        Every node pushes to ``fanout`` peers chosen by a deterministic
+        rotating schedule (seeded start offset + round counter), so
+        repeated rounds cycle each node through *all* peers — probabilistic
+        peer sampling without losing the coverage guarantee.  With
+        ``fanout=None`` (default) each node pushes to every reachable peer,
+        the all-pairs behaviour; with an explicit fanout, ``max_ranges``
+        defaults to ``delta_range_budget`` so one gossip tick has bounded
+        wire/compute cost.  Converged pairs cost one digest compare and
+        move zero payload bytes either way.
+        """
         ids = list(self.nodes)
-        for a in ids:
-            for b in ids:
-                if a != b and self.network.reachable(a, b):
+        n = len(ids)
+        if n < 2:
+            return []
+        k = n - 1 if fanout is None else max(1, min(fanout, n - 1))
+        if fanout is not None and max_ranges is None:
+            max_ranges = self.delta_range_budget
+        step = self._gossip_step
+        self._gossip_step += 1
+        stats = []
+        for i, a in enumerate(ids):
+            peers = ids[i + 1:] + ids[:i]          # all others, rotated
+            off = (self._gossip_offset[a] + step * k) % (n - 1)
+            for j in range(k):
+                b = peers[(off + j) % (n - 1)]
+                if self.network.reachable(a, b):
                     stats.append(self.delta_antientropy(
                         a, b, use_kernel=use_kernel, max_ranges=max_ranges))
         return stats
@@ -203,7 +372,7 @@ class KVCluster:
     def metadata_size(self, key: str) -> Dict[str, int]:
         return {n: node.metadata_size(key) for n, node in self.nodes.items()}
 
-    def all_values(self, key: str) -> FrozenSet[Any]:
+    def all_values(self, key: str):
         out = set()
         for node in self.nodes.values():
             out |= {v.value for v in node.versions(key)}

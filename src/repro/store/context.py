@@ -1,0 +1,174 @@
+"""Opaque causal-context tokens — the client-facing causality currency.
+
+The paper's client workflow (§4.1, §5.4) is GET → (values, *opaque*
+context) → PUT(context).  §5.4's key observation is that the context a
+client carries between those two steps can be *compacted to the ceiling*
+of the returned clock set — a single version vector ⌈S⌉ — without losing
+any causality information for the subsequent update: ``update`` only ever
+reads per-replica ceilings of the context, and GET contexts are downsets,
+so the ceiling VV denotes exactly the union of the siblings' histories.
+
+``CausalContext`` is that compaction reified as a wire token:
+
+* ``entries`` — the compacted ceiling, a sorted ``(replica_id, n)`` tuple.
+  O(R) in the replica universe, *independent of the sibling count* — five
+  concurrent siblings over two replicas still cost two entries.
+* ``residue`` — clocks of mechanisms with no VV ceiling (causal-history
+  oracles, LWW stamps, plain VVs of the §3 baselines).  DVV clocks are
+  always folded into ``entries``; the residue exists so the token stays a
+  faithful context for every mechanism the store can run, not just DVV.
+
+Tokens encode to ``bytes`` (``to_bytes``/``from_bytes``) so real clients
+can carry them across processes; the DVV encoding is a fixed-layout binary
+record (O(R)), while residues fall back to pickle (the token is a trusted
+server artifact, mirroring how Riak vclocks travel base64'd through
+clients that must not interpret them).
+
+The token is deliberately *iterable as a clock set* — legacy code (and the
+formal-condition property tests) that treats a context as a set of clocks
+keeps working: iterating a DVV token yields the single ceiling clock,
+whose history equals the union of the original siblings' histories.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+import warnings
+from dataclasses import dataclass
+from typing import Any, FrozenSet, Iterable, Iterator, Tuple
+
+from ..core.dvv import DVV
+
+_MAGIC = b"DCX1"                    # wire-format tag + version
+
+
+@dataclass(frozen=True)
+class CausalContext:
+    """An opaque, wire-serializable causal context (paper §5.4)."""
+
+    entries: Tuple[Tuple[str, int], ...] = ()   # compacted ceiling ⌈S⌉
+    residue: Tuple[Any, ...] = ()               # non-DVV clocks, verbatim
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def from_clocks(clocks: Iterable[Any]) -> "CausalContext":
+        """Compact a clock set: DVV components fold into the ceiling VV
+        (max of range top and dot — exact for §5.4 downset contexts);
+        anything else rides along as residue."""
+        ceiling = {}
+        residue = []
+        for c in clocks:
+            if isinstance(c, DVV):
+                for (r, m, n) in c.components:
+                    ceiling[r] = max(ceiling.get(r, 0), m, n)
+            else:
+                residue.append(c)
+        return CausalContext(
+            entries=tuple(sorted(ceiling.items())),
+            residue=tuple(sorted(residue, key=repr)))
+
+    @classmethod
+    def coerce(cls, context: Any) -> "CausalContext":
+        """Normalize anything a caller may pass as a context.
+
+        Accepts a token, its ``bytes`` encoding, ``None``, or — via the
+        deprecation shim — a legacy set/frozenset of clock objects."""
+        if context is None:
+            return EMPTY_CONTEXT
+        if isinstance(context, cls):
+            return context
+        if isinstance(context, (bytes, bytearray, memoryview)):
+            return cls.from_bytes(bytes(context))
+        if isinstance(context, (frozenset, set, tuple, list)):
+            if context:   # the empty set doubles as "new session"; no nag
+                warnings.warn(
+                    "passing raw clock sets as PUT contexts is deprecated; "
+                    "pass the GetResult.context token (or its to_bytes())",
+                    DeprecationWarning, stacklevel=3)
+            return cls.from_clocks(context)
+        raise TypeError(f"cannot interpret {type(context).__name__} "
+                        f"as a causal context")
+
+    # -- views -------------------------------------------------------------
+
+    @property
+    def is_empty(self) -> bool:
+        return not self.entries and not self.residue
+
+    def __bool__(self) -> bool:
+        return not self.is_empty
+
+    def to_clock_set(self) -> FrozenSet[Any]:
+        """The object-clock view ``mechanism.update`` consumes: one ceiling
+        DVV (when any DVV state was compacted) plus the residue."""
+        out = set(self.residue)
+        if self.entries:
+            out.add(DVV(tuple((r, n, 0) for r, n in self.entries)))
+        return frozenset(out)
+
+    def __iter__(self) -> Iterator[Any]:
+        return iter(self.to_clock_set())
+
+    def __len__(self) -> int:
+        return len(self.to_clock_set())
+
+    def ceiling_items(self) -> Tuple[Tuple[str, int], ...]:
+        """Per-replica ceilings, with residue clocks folded in when they
+        expose ``ids()/ceil()`` (DVV/VV-shaped).  This is what the packed
+        store consumes — no clock object is ever constructed from it."""
+        merged = dict(self.entries)
+        for c in self.residue:
+            if not hasattr(c, "ids") or not hasattr(c, "ceil"):
+                raise TypeError(
+                    f"clock {type(c).__name__} has no VV ceiling; this "
+                    f"context cannot drive an array-native update")
+            for r in c.ids():
+                merged[r] = max(merged.get(r, 0), c.ceil(r))
+        return tuple(sorted(merged.items()))
+
+    # -- wire codec --------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """Encode for the wire.  O(R) for DVV contexts: a fixed header,
+        then one length-prefixed id + uint64 per replica entry.  Residues
+        (non-DVV mechanisms only) append a pickle blob."""
+        parts = [_MAGIC, struct.pack("<BH", 1 if self.residue else 0,
+                                     len(self.entries))]
+        for r, n in self.entries:
+            rid = r.encode()
+            parts.append(struct.pack("<H", len(rid)))
+            parts.append(rid)
+            parts.append(struct.pack("<Q", n))
+        if self.residue:
+            parts.append(pickle.dumps(self.residue))
+        return b"".join(parts)
+
+    @staticmethod
+    def from_bytes(data: bytes) -> "CausalContext":
+        if data[:4] != _MAGIC:
+            raise ValueError("not a CausalContext token")
+        has_residue, count = struct.unpack_from("<BH", data, 4)
+        off = 7
+        entries = []
+        for _ in range(count):
+            (rlen,) = struct.unpack_from("<H", data, off)
+            off += 2
+            rid = data[off: off + rlen].decode()
+            off += rlen
+            (n,) = struct.unpack_from("<Q", data, off)
+            off += 8
+            entries.append((rid, n))
+        residue: Tuple[Any, ...] = ()
+        if has_residue:
+            residue = pickle.loads(data[off:])
+        return CausalContext(entries=tuple(entries), residue=residue)
+
+    def __repr__(self) -> str:
+        ent = ",".join(f"{r}:{n}" for r, n in self.entries)
+        res = f"+{len(self.residue)}res" if self.residue else ""
+        return f"<ctx {ent or '∅'}{res}>"
+
+
+#: The canonical "new session" context (no causal dependencies).
+EMPTY_CONTEXT = CausalContext()

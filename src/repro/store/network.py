@@ -23,6 +23,36 @@ class Unavailable(Exception):
     *strict* quorum request against a partitioned minority still fails)."""
 
 
+def payload_nbytes(obj: Any) -> int:
+    """Wire-size estimate of a message payload.
+
+    Objects that know their encoding (``PackedPayload``, digest snapshots,
+    ``CausalContext`` via ``to_bytes``) report it; containers recurse;
+    everything else is priced at its repr — the sim-transport's
+    serialization stand-in.  Keeps ``SimNetwork.bytes_sent`` honest now
+    that replication messages carry encoded array payloads.
+    """
+    nbytes = getattr(obj, "nbytes", None)
+    if callable(nbytes):
+        return int(nbytes())
+    to_bytes = getattr(obj, "to_bytes", None)
+    if callable(to_bytes) and not isinstance(obj, int):
+        try:
+            return len(to_bytes())
+        except TypeError:       # int.to_bytes-style signatures
+            pass
+    if isinstance(obj, (bytes, bytearray, str)):
+        return len(obj)
+    if isinstance(obj, (int, float)):
+        return 8
+    if isinstance(obj, (tuple, list, set, frozenset)):
+        return sum(payload_nbytes(x) for x in obj)
+    if isinstance(obj, dict):
+        return sum(payload_nbytes(k) + payload_nbytes(v)
+                   for k, v in obj.items())
+    return len(repr(obj).encode())
+
+
 @dataclass
 class Message:
     src: str
@@ -46,6 +76,7 @@ class SimNetwork:
         self.down: Set[str] = set()
         self.delivered = 0
         self.dropped = 0
+        self.bytes_sent = 0
 
     # -- topology control ----------------------------------------------------
     def partition(self, *groups: Set[str]) -> None:
@@ -84,6 +115,7 @@ class SimNetwork:
             return False
         latency = self.base_latency + self.rng.random() * self.jitter
         self.queue.append(Message(src, dst, payload, self.now + latency))
+        self.bytes_sent += payload_nbytes(payload)
         return True
 
     def deliver(self, handler: Callable[[Message], None],

@@ -47,6 +47,7 @@ import numpy as np
 
 from ..core import batched as B
 from ..core.dvv import DVV
+from .context import CausalContext
 from .version import Version
 
 NO_DOT = B.NO_DOT
@@ -79,6 +80,22 @@ def _hash_str(s: str) -> int:
     """Stable (process-independent) 64-bit hash of an interning-table entry."""
     return int.from_bytes(
         hashlib.blake2b(s.encode(), digest_size=8).digest(), "little")
+
+
+def ceiling_from_rows(vv: np.ndarray, dot_id: np.ndarray, dot_n: np.ndarray
+                      ) -> np.ndarray:
+    """Per-replica ceiling ⌈S⌉ over packed clock rows: column max with the
+    dots folded in.  The one §5.4 compaction shared by GET-context
+    production (``context_of``, ``quorum_merge_key``)."""
+    R = vv.shape[-1]
+    if vv.shape[0] == 0:
+        return np.zeros(R, np.int64)
+    ceil = vv.max(axis=0).astype(np.int64)
+    has_dot = np.asarray(dot_id) != NO_DOT
+    if has_dot.any():
+        np.maximum.at(ceil, np.asarray(dot_id)[has_dot],
+                      np.asarray(dot_n)[has_dot].astype(np.int64))
+    return ceil
 
 
 def key_bucket(key: str, n_buckets: int = DIGEST_BUCKETS) -> int:
@@ -177,6 +194,11 @@ class PackedPayload:
     dot_n: np.ndarray       # int32[M]
     key_ix: np.ndarray      # int32[M]
     values: Tuple[Any, ...]
+    wall: Optional[np.ndarray] = None   # float64[M] PUT wall-times
+
+    def __post_init__(self) -> None:
+        if self.wall is None:
+            self.wall = np.zeros(int(self.vv.shape[0]), np.float64)
 
     def __eq__(self, other: object) -> bool:
         if not isinstance(other, PackedPayload):
@@ -187,6 +209,7 @@ class PackedPayload:
                 and np.array_equal(self.dot_id, other.dot_id)
                 and np.array_equal(self.dot_n, other.dot_n)
                 and np.array_equal(self.key_ix, other.key_ix)
+                and np.array_equal(self.wall, other.wall)
                 and self.values == other.values)
 
     def __len__(self) -> int:
@@ -196,7 +219,7 @@ class PackedPayload:
         """Wire size estimate: clock arrays + interning tables + values
         (values priced at their repr, the sim-transport's serialization)."""
         arrays = (self.vv.nbytes + self.dot_id.nbytes + self.dot_n.nbytes
-                  + self.key_ix.nbytes)
+                  + self.key_ix.nbytes + self.wall.nbytes)
         tables = (sum(len(k.encode()) for k in self.keys)
                   + sum(len(r.encode()) for r in self.replica_ids))
         values = sum(len(repr(v).encode()) for v in self.values)
@@ -218,6 +241,7 @@ class PackedVersionStore:
         self.key_ix = np.full(_INITIAL_SLOTS, -1, np.int32)
         self.valid = np.zeros(_INITIAL_SLOTS, bool)
         self.values: List[Any] = [None] * _INITIAL_SLOTS
+        self.wall = np.zeros(_INITIAL_SLOTS, np.float64)
         self.n_slots = 0                 # high-water mark
         self.n_dead = 0
         self.replica_ids: List[str] = []
@@ -237,6 +261,10 @@ class PackedVersionStore:
         self._replica_hash: List[int] = []            # aligned with replica_ids
         self._key_hash = np.zeros(_INITIAL_KEYS, _U64)    # aligned with keys
         self._key_bucket = np.zeros(_INITIAL_KEYS, np.int32)
+        # bucket → live-slot index (maintained unconditionally — it is what
+        # makes payload(key_ranges=...) O(divergent slots) instead of
+        # O(store); see DESIGN.md §6.3)
+        self._bucket_slots: Dict[int, set] = {}
 
     # -- interning / growth ------------------------------------------------
 
@@ -285,6 +313,7 @@ class PackedVersionStore:
         self.key_ix = np.pad(self.key_ix, (0, pad), constant_values=-1)
         self.valid = np.pad(self.valid, (0, pad))
         self.slot_hash = np.pad(self.slot_hash, (0, pad))
+        self.wall = np.pad(self.wall, (0, pad))
         self.values.extend([None] * pad)
 
     def compact(self, *, force: bool = False) -> None:
@@ -304,6 +333,7 @@ class PackedVersionStore:
         self.dot_n[:n] = self.dot_n[keep]
         self.key_ix[:n] = self.key_ix[keep]
         self.slot_hash[:n] = self.slot_hash[keep]
+        self.wall[:n] = self.wall[keep]
         self.values[:n] = [self.values[s] for s in keep]
         self.valid[:n] = True
         self.valid[n:] = False
@@ -321,6 +351,10 @@ class PackedVersionStore:
                 # corrupt version sets silently downstream — fail loudly.
                 assert (new >= 0).all(), (kix, slots)
                 self._slots_by_key[kix] = new.tolist()
+        # bucket→slot index holds only live slots, so every entry remaps
+        self._bucket_slots = {
+            b: {int(remap[s]) for s in slots}
+            for b, slots in self._bucket_slots.items() if slots}
 
     # -- slot accessors ----------------------------------------------------
 
@@ -436,8 +470,27 @@ class PackedVersionStore:
             n = len(self.keys)
             self._key_bucket[:n] = (
                 self._key_hash[:n] & _U64(self.n_buckets - 1)).astype(np.int32)
+            self._rebuild_bucket_index()
             if self.track_digests:
                 self.rebuild_digests()
+
+    def _rebuild_bucket_index(self) -> None:
+        """Recompute the bucket→slot index from slot content (O(live))."""
+        self._bucket_slots = {}
+        live = np.flatnonzero(self.valid[: self.n_slots])
+        buckets = self._key_bucket[self.key_ix[live]]
+        for s, b in zip(live.tolist(), buckets.tolist()):
+            self._bucket_slots.setdefault(int(b), set()).add(int(s))
+
+    def check_bucket_index(self) -> bool:
+        """True iff the incremental bucket→slot index matches a full scan."""
+        live = np.flatnonzero(self.valid[: self.n_slots])
+        buckets = self._key_bucket[self.key_ix[live]]
+        expect: Dict[int, set] = {}
+        for s, b in zip(live.tolist(), buckets.tolist()):
+            expect.setdefault(int(b), set()).add(int(s))
+        got = {b: set(v) for b, v in self._bucket_slots.items() if v}
+        return expect == got
 
     def rebuild_digests(self) -> np.ndarray:
         """Recompute buckets and live counts from slot content (in place).
@@ -462,6 +515,8 @@ class PackedVersionStore:
 
     def check_digests(self) -> bool:
         """True iff the incremental digest state matches a full recompute."""
+        if not self.check_bucket_index():
+            return False
         saved = (self.digest, self.slot_hash.copy(), self._bucket_live)
         try:
             rebuilt = self.rebuild_digests()
@@ -496,13 +551,45 @@ class PackedVersionStore:
     def versions(self, key: str) -> FrozenSet[Version]:
         """Client-edge decode of one key's live versions."""
         return frozenset(
-            Version(self.decode_slot(s), self.values[s])
+            Version(self.decode_slot(s), self.values[s],
+                    wall=float(self.wall[s]))
             for s in self.key_slots(key))
+
+    def context_of(self, key: str) -> CausalContext:
+        """The GET context token for one key, straight from the int32
+        columns: per-replica ceiling ⌈S⌉ (max of ranges and dots) over the
+        key's live slots.  Zero object-clock decodes — this is the packed
+        backend's §5.4 compaction, O(siblings·R) integer max, O(R) output.
+        """
+        slots = self.key_slots(key)
+        if not slots:
+            return CausalContext()
+        s = np.asarray(slots)
+        R = self.n_replicas
+        ceil = ceiling_from_rows(self.vv[s, :R], self.dot_id[s],
+                                 self.dot_n[s])
+        return CausalContext(entries=tuple(sorted(
+            (self.replica_ids[c], int(ceil[c]))
+            for c in range(R) if ceil[c] > 0)))
+
+    def ceiling_of_entries(self, entries: Iterable[Tuple[str, int]]
+                           ) -> np.ndarray:
+        """A token's ceiling entries as a vv row in local columns (growing
+        the universe for unseen replica ids).  The token-native twin of
+        ``context_ceiling`` — no clock objects anywhere."""
+        items = list(entries)
+        for rid, _ in items:
+            self.intern_replica(rid)
+        vv = np.zeros(self.n_replicas, np.int32)
+        for rid, n in items:
+            col = self._replica_index[rid]
+            vv[col] = max(vv[col], n)
+        return vv
 
     # -- per-key mutation (control plane: PUT / replication messages) ------
 
     def _insert_slot(self, kix: int, vv: np.ndarray, dot_id: int, dot_n: int,
-                     value: Any) -> int:
+                     value: Any, wall: float = 0.0) -> int:
         self._ensure_capacity(1)
         s = self.n_slots
         self.vv[s, : len(vv)] = vv
@@ -512,21 +599,31 @@ class PackedVersionStore:
         self.key_ix[s] = kix
         self.valid[s] = True
         self.values[s] = value
+        self.wall[s] = wall
         self.n_slots += 1
         self._slots_by_key.setdefault(kix, []).append(s)
+        bucket = int(self._key_bucket[kix])
+        self._bucket_slots.setdefault(bucket, set()).add(s)
         if self.track_digests:
             R = self.n_replicas
             self.slot_hash[s] = self._slot_hash_rows(
                 self.vv[s: s + 1, :R], self.dot_id[s: s + 1],
                 self.dot_n[s: s + 1], self.key_ix[s: s + 1])[0]
-            self.digest[self._key_bucket[kix]] ^= self.slot_hash[s]
-            self._bucket_live[self._key_bucket[kix]] += 1
+            self.digest[bucket] ^= self.slot_hash[s]
+            self._bucket_live[bucket] += 1
         return s
+
+    def _index_kill(self, slots: np.ndarray) -> None:
+        """Drop ``slots`` from the bucket→slot index (before valid flips)."""
+        buckets = self._key_bucket[self.key_ix[np.asarray(slots)]]
+        for s, b in zip(np.asarray(slots).tolist(), buckets.tolist()):
+            self._bucket_slots[int(b)].discard(int(s))
 
     def _kill_slots(self, kix: int, dead: Sequence[int]) -> None:
         if not len(dead):
             return
         self._digest_kill(np.asarray(dead))
+        self._index_kill(np.asarray(dead))
         self.valid[np.asarray(dead)] = False
         self.n_dead += len(dead)
         deadset = set(int(d) for d in dead)
@@ -534,7 +631,8 @@ class PackedVersionStore:
             s for s in self._slots_by_key[kix] if s not in deadset]
 
     def sync_key(self, key: str, inc_vv: np.ndarray, inc_dot_id: np.ndarray,
-                 inc_dot_n: np.ndarray, inc_values: Sequence[Any]) -> bool:
+                 inc_dot_n: np.ndarray, inc_values: Sequence[Any],
+                 inc_walls: Optional[Sequence[float]] = None) -> bool:
         """Merge incoming clocks (already in local columns) into one key.
 
         Pure numpy — the per-key path taken by PUT and replication-message
@@ -568,8 +666,11 @@ class PackedVersionStore:
             changed = True
         for j in range(M):
             if mask[L + j]:
-                self._insert_slot(kix, inc_vv[j], int(inc_dot_id[j]),
-                                  int(inc_dot_n[j]), inc_values[j])
+                self._insert_slot(
+                    kix, inc_vv[j], int(inc_dot_id[j]), int(inc_dot_n[j]),
+                    inc_values[j],
+                    wall=float(inc_walls[j]) if inc_walls is not None
+                    else 0.0)
                 changed = True
         self.compact()
         self._maybe_grow_buckets()
@@ -595,10 +696,11 @@ class PackedVersionStore:
         return self.sync_key(
             key, vv, np.asarray([r[1] for r in rows], np.int32),
             np.asarray([r[2] for r in rows], np.int32),
-            [v.value for v in ordered])
+            [v.value for v in ordered], [v.wall for v in ordered])
 
     def update_key(self, key: str, ctx_vv: np.ndarray, coordinator: str,
-                   value: Any) -> Tuple[np.ndarray, int, int]:
+                   value: Any, wall: float = 0.0
+                   ) -> Tuple[np.ndarray, int, int]:
         """Paper §5.3 update, entirely in arrays.
 
         ``ctx_vv`` is the context ceiling ⌈S⌉ already in local columns
@@ -616,7 +718,55 @@ class PackedVersionStore:
         # The §5.4 invariant guarantees n > m (all r-events are known at r).
         dot_n = local_max + 1
         self.sync_key(key, vv[None, :], np.asarray([r_ix], np.int32),
-                      np.asarray([dot_n], np.int32), [value])
+                      np.asarray([dot_n], np.int32), [value], [wall])
+        return vv, r_ix, dot_n
+
+    def update_keys(self, updates: Sequence[Tuple[str, Iterable[Tuple[str,
+                    int]], Any, float]], coordinator: str, *,
+                    mask_fn=None) -> Tuple[np.ndarray, int, np.ndarray]:
+        """Batched §5.3 update: mint one clock per key, then merge all of
+        them with ONE grouped ``apply_payload`` pass (one scatter, one
+        ``sync_mask`` evaluation — optionally the shape-bucketed jit/Pallas
+        cache via ``mask_fn``) instead of K independent ``sync_key`` walks.
+
+        ``updates`` is ``[(key, ceiling_entries, value, wall), ...]`` with
+        *distinct* keys (a batch is a set of independent writes; two writes
+        to one key have a client-side causal order and must be two calls).
+        Returns ``(vv[M, R], r_ix, dot_n[M])`` for the minted clocks,
+        aligned with ``updates``.
+        """
+        keys = [u[0] for u in updates]
+        if len(set(keys)) != len(keys):
+            raise ValueError("update_keys requires distinct keys per batch")
+        r_ix = self.intern_replica(coordinator)
+        for _, entries, _, _ in updates:
+            for rid, _ in entries:
+                self.intern_replica(rid)
+        R = self.n_replicas
+        M = len(updates)
+        vv = np.zeros((M, R), np.int32)
+        for i, (_, entries, _, _) in enumerate(updates):
+            row = self.ceiling_of_entries(entries)   # universe pre-grown
+            vv[i, : len(row)] = row
+        # ⌈Sr⌉_r per key over the resident slots, one grouped scatter.
+        kixs = [self.intern_key(k) for k in keys]
+        lists = [self._slots_by_key.get(kx, []) for kx in kixs]
+        loc_rows = np.asarray([s for l in lists for s in l], np.int64)
+        loc_group = np.repeat(np.arange(M), [len(l) for l in lists])
+        local_max = B.grouped_ceil_at_np(
+            self.vv[loc_rows, r_ix], self.dot_id[loc_rows],
+            self.dot_n[loc_rows], loc_group, M, r_ix)
+        dot_n = (local_max + 1).astype(np.int32)
+        minted = PackedPayload(
+            replica_ids=tuple(self.replica_ids),
+            keys=tuple(keys),
+            vv=vv,
+            dot_id=np.full(M, r_ix, np.int32),
+            dot_n=dot_n,
+            key_ix=np.arange(M, dtype=np.int32),
+            values=tuple(u[2] for u in updates),
+            wall=np.asarray([u[3] for u in updates], np.float64))
+        self.apply_payload(minted, mask_fn=mask_fn)
         return vv, r_ix, dot_n
 
     def context_ceiling(self, context: Iterable[DVV]) -> np.ndarray:
@@ -642,10 +792,12 @@ class PackedVersionStore:
 
         ``key_ranges`` selects by digest bucket instead: only live slots
         whose key hashes into one of the given buckets are shipped — the
-        phase-2 slice of a delta round.  ``ranges_width`` interprets the
-        bucket ids at a narrower power-of-two width (a peer with a smaller
-        tree; must divide this store's width).  Pure array slicing — zero
-        object decode either way.
+        phase-2 slice of a delta round, gathered from the incremental
+        bucket→slot index in O(selected slots), not O(store).
+        ``ranges_width`` interprets the bucket ids at a narrower
+        power-of-two width (a peer with a smaller tree; must divide this
+        store's width).  Pure array slicing — zero object decode either
+        way.
         """
         R = self.n_replicas
         if keys is not None and key_ranges is not None:
@@ -656,13 +808,18 @@ class PackedVersionStore:
                 raise ValueError(
                     f"ranges_width {width} incompatible with "
                     f"{self.n_buckets} buckets")
-            sel = np.zeros(width, bool)
-            sel[np.asarray(list(key_ranges), np.int64)] = True
-            live = self.valid[: self.n_slots]
-            in_range = sel[self._key_bucket[self.key_ix[: self.n_slots]]
-                           & (width - 1)]
-            rows = np.flatnonzero(live & in_range)
-            uniq, inv = np.unique(self.key_ix[rows], return_inverse=True)
+            # A narrow bucket ``b`` at ``width`` is the fold of the local
+            # buckets {b + j·width}; union their slot sets from the index.
+            cand: List[int] = []
+            for b in key_ranges:
+                for j in range(self.n_buckets // width):
+                    slots = self._bucket_slots.get(int(b) + j * width)
+                    if slots:
+                        cand.extend(slots)
+            rows = np.asarray(sorted(cand), dtype=np.int64)
+            uniq, inv = np.unique(self.key_ix[rows], return_inverse=True) \
+                if len(rows) else (np.zeros(0, np.int64), np.zeros(0,
+                                                                   np.int64))
             sel_keys = [self.keys[int(kx)] for kx in uniq]
             out_kix = inv.astype(np.int32)
         elif keys is None:
@@ -694,6 +851,7 @@ class PackedVersionStore:
             dot_n=self.dot_n[rows].copy(),
             key_ix=out_kix,
             values=tuple(self.values[int(s)] for s in rows),
+            wall=self.wall[rows].copy(),
         )
 
     def _remap_columns(self, payload: PackedPayload
@@ -788,6 +946,7 @@ class PackedVersionStore:
             dead_rows = loc_rows[~loc_keep]
             if len(dead_rows):
                 self._digest_kill(dead_rows)
+                self._index_kill(dead_rows)
                 self.valid[dead_rows] = False
                 self.n_dead += len(dead_rows)
                 dead_set = set(dead_rows.tolist())
@@ -809,21 +968,24 @@ class PackedVersionStore:
             self.vv[dst, R:] = 0
             self.dot_id[dst] = inc_did[new_rows]
             self.dot_n[dst] = inc_dn[new_rows]
+            self.wall[dst] = payload.wall[new_rows]
             groups_new = inc_group[new_rows]
             kix_new = key_ixs[groups_new]
             self.key_ix[dst] = kix_new
             self.valid[dst] = True
+            new_buckets = self._key_bucket[kix_new]
             if self.track_digests:
                 new_hashes = self._slot_hash_rows(
                     inc_vv[new_rows], inc_did[new_rows], inc_dn[new_rows],
                     kix_new)
                 self.slot_hash[dst] = new_hashes
-                new_buckets = self._key_bucket[kix_new]
                 np.bitwise_xor.at(self.digest, new_buckets, new_hashes)
                 np.add.at(self._bucket_live, new_buckets, 1)
             for i, row in enumerate(new_rows):
                 self.values[s0 + i] = payload.values[int(row)]
                 self._slots_by_key[int(kix_new[i])].append(s0 + i)
+                self._bucket_slots.setdefault(
+                    int(new_buckets[i]), set()).add(s0 + i)
             self.n_slots += n_new
             changed_groups[groups_new] = True
 
@@ -842,6 +1004,7 @@ class PackedVersionStore:
         out.key_ix = self.key_ix.copy()
         out.valid = self.valid.copy()
         out.values = list(self.values)
+        out.wall = self.wall.copy()
         out.n_slots = self.n_slots
         out.n_dead = self.n_dead
         out.replica_ids = list(self.replica_ids)
@@ -855,8 +1018,93 @@ class PackedVersionStore:
         out._replica_hash = list(self._replica_hash)
         out._key_hash = self._key_hash.copy()
         out._key_bucket = self._key_bucket.copy()
+        out._bucket_slots = {b: set(v) for b, v in self._bucket_slots.items()}
         return out
 
     def __repr__(self) -> str:
         return (f"<PackedVersionStore keys={self.total_keys()} "
                 f"versions={self.total_versions()} R={self.n_replicas}>")
+
+
+# ---------------------------------------------------------------------------
+# Quorum GET merge — arrays across stores, zero object-clock decodes.
+# ---------------------------------------------------------------------------
+
+def _clock_sort_key(vv_row: np.ndarray, dot_col: int, dot_n: int,
+                    ids: Sequence[str]) -> str:
+    """A canonical string for one packed clock, equal by construction to
+    ``repr(B.decode(...))`` — the resolution tie-break of GetResult.value,
+    produced without building a DVV object."""
+    parts = []
+    for rid, col in sorted((ids[c], c) for c in range(len(ids))):
+        m = int(vv_row[col])
+        n = int(dot_n) if col == dot_col else 0
+        if m or n:
+            parts.append(f"({rid},{m})" if n == 0 else f"({rid},{m},{n})")
+    return "{" + ", ".join(parts) + "}"
+
+
+def quorum_merge_key(stores: Sequence[PackedVersionStore], key: str
+                     ) -> Tuple[List[Any], List[float], List[str],
+                                Tuple[Tuple[str, int], ...]]:
+    """Merge one key's version sets across a read quorum of packed stores.
+
+    The whole §4 read path in arrays: remap every store's slots for ``key``
+    into a union replica universe (one gather per store), evaluate survival
+    with a single ``sync_mask`` sweep, and compute the §5.4 context ceiling
+    from the surviving rows.  Returns ``(values, walls, clock_keys,
+    ceiling_entries)`` for the survivors — no ``DVV`` object is created
+    anywhere (the acceptance criterion for packed GET).
+    """
+    ids: List[str] = []
+    index: Dict[str, int] = {}
+    chunks = []
+    for st in stores:
+        slots = st.key_slots(key)
+        if not slots:
+            continue
+        cols = []
+        for rid in st.replica_ids:
+            ix = index.get(rid)
+            if ix is None:
+                ix = len(ids)
+                ids.append(rid)
+                index[rid] = ix
+            cols.append(ix)
+        s = np.asarray(slots)
+        chunks.append((np.asarray(cols, np.int64), st.vv[s, : st.n_replicas],
+                       st.dot_id[s], st.dot_n[s],
+                       [st.values[int(i)] for i in slots], st.wall[s]))
+    if not chunks:
+        return [], [], [], ()
+    Ru = len(ids)
+    K = sum(c[1].shape[0] for c in chunks)
+    vv = np.zeros((K, Ru), np.int32)
+    did = np.full(K, NO_DOT, np.int32)
+    dn = np.zeros(K, np.int32)
+    walls = np.zeros(K, np.float64)
+    values: List[Any] = []
+    off = 0
+    for col_map, cvv, cdid, cdn, cvals, cwall in chunks:
+        n = cvv.shape[0]
+        if len(col_map):
+            vv[off: off + n][:, col_map] = cvv
+        did[off: off + n] = np.where(
+            cdid != NO_DOT,
+            col_map[np.clip(cdid, 0, None)] if len(col_map) else cdid,
+            NO_DOT).astype(np.int32)
+        dn[off: off + n] = cdn
+        walls[off: off + n] = cwall
+        values.extend(cvals)
+        off += n
+    mask = B.sync_mask_np(vv[None], did[None], dn[None],
+                          np.ones((1, K), bool))[0]
+    surv = np.flatnonzero(mask)
+    ceil = ceiling_from_rows(vv[surv], did[surv], dn[surv])
+    entries = tuple(sorted(
+        (ids[c], int(ceil[c])) for c in range(Ru) if ceil[c] > 0))
+    out_values = [values[int(i)] for i in surv]
+    out_walls = [float(walls[int(i)]) for i in surv]
+    out_keys = [_clock_sort_key(vv[int(i)], int(did[int(i)]),
+                                int(dn[int(i)]), ids) for i in surv]
+    return out_values, out_walls, out_keys, entries

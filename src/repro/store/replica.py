@@ -14,14 +14,19 @@ Two storage backends implement the same node-local surface:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, FrozenSet, Iterable, Optional, Union
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, \
+    Tuple, Union
 
 from ..core import batched as B
 from ..core.kernel import Mechanism
+from .context import CausalContext
 from .packed import PackedPayload, PackedVersionStore
 from .version import Version, clocks_of, sync_versions
 
 Payload = Union[Dict[str, FrozenSet[Version]], PackedPayload]
+
+#: One batched write: (key, context token, value, wall_time).
+UpdateBatch = Sequence[Tuple[str, CausalContext, Any, float]]
 
 
 class ObjectBackend:
@@ -44,13 +49,13 @@ class ObjectBackend:
         return merged
 
     def coordinate_update(self, key: str, value: Any,
-                          context: FrozenSet[Any], *,
+                          context: CausalContext, *,
                           client_id: str, client_counter: int,
                           wall_time: float) -> Version:
         u_clock = self.mechanism.update(
-            context, clocks_of(self.versions(key)), self.node_id,
-            client_id, client_counter, wall_time)
-        version = Version(u_clock, value)
+            context.to_clock_set(), clocks_of(self.versions(key)),
+            self.node_id, client_id, client_counter, wall_time)
+        version = Version(u_clock, value, wall=wall_time)
         self.apply_sync(key, frozenset({version}))
         return version
 
@@ -102,16 +107,34 @@ class PackedBackend:
         return self.versions(key)
 
     def coordinate_update(self, key: str, value: Any,
-                          context: FrozenSet[Any], *,
+                          context: CausalContext, *,
                           client_id: str, client_counter: int,
                           wall_time: float) -> Version:
-        ctx_vv = self.packed.context_ceiling(context)   # edge encode
+        # Token-native: the ceiling entries go straight to int32 columns —
+        # no clock object is built from the context.
+        ctx_vv = self.packed.ceiling_of_entries(context.ceiling_items())
         vv, r_ix, dot_n = self.packed.update_key(
-            key, ctx_vv, self.node_id, value)
+            key, ctx_vv, self.node_id, value, wall=wall_time)
         # Decode only the freshly minted clock for the PutAck (edge decode).
         clock = B.decode(vv[: self.packed.n_replicas], r_ix, dot_n,
                          self.packed.replica_ids)
-        return Version(clock, value)
+        return Version(clock, value, wall=wall_time)
+
+    def coordinate_updates(self, batch: UpdateBatch, *,
+                           mask_fn=None) -> List[Version]:
+        """Batched §5.3 updates over distinct keys: one grouped encode →
+        one vectorized update → one scatter (``PackedVersionStore.
+        update_keys``), instead of K independent ``sync_key`` walks."""
+        items = [(key, ctx.ceiling_items(), value, wall)
+                 for (key, ctx, value, wall) in batch]
+        vv, r_ix, dot_n = self.packed.update_keys(
+            items, self.node_id, mask_fn=mask_fn)
+        R = self.packed.n_replicas
+        return [
+            Version(B.decode(vv[i, :R], r_ix, int(dot_n[i]),
+                             self.packed.replica_ids),
+                    batch[i][2], wall=batch[i][3])
+            for i in range(len(batch))]
 
     def antientropy_payload(self, keys: Optional[Iterable[str]] = None
                             ) -> PackedPayload:
@@ -146,7 +169,7 @@ def _as_object_payload(payload: Payload) -> Dict[str, FrozenSet[Version]]:
         clock = B.decode(payload.vv[i, :R], int(payload.dot_id[i]),
                          int(payload.dot_n[i]), payload.replica_ids)
         out[payload.keys[int(payload.key_ix[i])]].add(
-            Version(clock, payload.values[i]))
+            Version(clock, payload.values[i], wall=float(payload.wall[i])))
     return {k: frozenset(v) for k, v in out.items()}
 
 
@@ -179,13 +202,30 @@ class ReplicaNode:
         return self.backend.apply_sync(key, incoming)
 
     def coordinate_update(self, key: str, value: Any,
-                          context: FrozenSet[Any], *,
+                          context: Any = None, *,
                           client_id: str = "?", client_counter: int = 0,
                           wall_time: float = 0.0) -> Version:
-        """u = update(S, S_C, C) followed by S_C' = sync(S_C, {u})."""
+        """u = update(S, S_C, C) followed by S_C' = sync(S_C, {u}).
+
+        ``context`` may be a ``CausalContext`` token, its bytes encoding,
+        or (deprecated) a raw clock set."""
         return self.backend.coordinate_update(
-            key, value, context, client_id=client_id,
+            key, value, CausalContext.coerce(context), client_id=client_id,
             client_counter=client_counter, wall_time=wall_time)
+
+    def coordinate_updates(self, batch: UpdateBatch, *,
+                           client_id: str = "?", client_counter: int = 0,
+                           mask_fn=None) -> List[Version]:
+        """Batched multi-key coordination.  The packed backend takes the
+        one-scatter vectorized path; the object backend (the conformance
+        reference, and any non-DVV mechanism) degrades to a loop."""
+        if isinstance(self.backend, PackedBackend):
+            return self.backend.coordinate_updates(batch, mask_fn=mask_fn)
+        return [
+            self.backend.coordinate_update(
+                key, value, ctx, client_id=client_id,
+                client_counter=client_counter, wall_time=wall)
+            for (key, ctx, value, wall) in batch]
 
     # -- anti-entropy ------------------------------------------------------------
     def antientropy_payload(self, keys: Optional[Iterable[str]] = None

@@ -3,10 +3,17 @@
 ``sync`` is lifted from clock sets (paper §4) to version sets: a version is
 discarded iff its clock is strictly dominated.  Versions with equal clocks
 are the same write (clocks are unique per update event) and are deduped.
+
+Each version also records the coordinator wall-time of its PUT.  The wall
+is *metadata*, not causality: it is excluded from equality/hashing (two
+replicas holding the same write compare equal whatever bookkeeping they
+carry) and never enters a clock comparison.  Its one job is the
+deterministic register resolution of ``GetResult.value`` — concurrent
+siblings are totally ordered by ``(wall, repr(clock), repr(value))``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, FrozenSet, Tuple
 
 
@@ -14,9 +21,17 @@ from typing import Any, FrozenSet, Tuple
 class Version:
     clock: Any
     value: Any
+    wall: float = field(default=0.0, compare=False)
 
     def __repr__(self) -> str:
         return f"<{self.value!r} @ {self.clock!r}>"
+
+
+def resolution_key(v: Version) -> Tuple[float, str, str]:
+    """The total order used to resolve concurrent siblings into a single
+    register value: latest wall-time wins, clock repr then value repr break
+    ties deterministically (documented in DESIGN.md §7)."""
+    return (v.wall, repr(v.clock), repr(v.value))
 
 
 def sync_versions(S1: FrozenSet[Version], S2: FrozenSet[Version],

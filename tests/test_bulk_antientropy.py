@@ -9,6 +9,8 @@ pytest.importorskip(
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
+pytestmark = pytest.mark.property     # dedicated lane: `make test-property`
+
 from repro.core import DVV_MECHANISM
 from repro.store import KVCluster, SimNetwork, Unavailable
 from repro.store.bulk import bulk_receive_antientropy, bulk_sync

@@ -28,6 +28,8 @@ pytest.importorskip(
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
+pytestmark = pytest.mark.property     # dedicated lane: `make test-property`
+
 from repro.core import DVV_MECHANISM, downset, sync_conditions_hold
 from repro.core.kernel import ORACLE_MECHANISM
 from repro.core.dvv import sync as dvv_sync

@@ -10,6 +10,8 @@ pytest.importorskip(
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
+pytestmark = pytest.mark.property     # dedicated lane: `make test-property`
+
 from repro.core import (
     DVV, DVV_MECHANISM, downset, sync_conditions_hold,
     update_conditions_hold_histories,
