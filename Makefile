@@ -2,7 +2,9 @@
 # ROADMAP.md (pytest.ini deselects `slow`-marked fuzz phases by default);
 # `make test-all` runs everything including the slow phases;
 # `make test-property` runs only the hypothesis property suites (their
-# dedicated lane). `bench-smoke` exercises the benchmark harness at toy
+# dedicated lane); `make test-churn` runs the membership/fault-injection
+# conformance suite (pinned fast schedules + the slow hypothesis phase).
+# `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
 # looped client calls and writes BENCH_client_api.json; `lint` is a
@@ -12,8 +14,8 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-property bench-smoke bench bench-delta \
-	bench-client lint check
+.PHONY: test test-all test-property test-churn bench-smoke bench \
+	bench-delta bench-client bench-churn lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -23,6 +25,9 @@ test-all:
 
 test-property:
 	$(PY) -m pytest -q -m property
+
+test-churn:
+	$(PY) -m pytest -q -m churn
 
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
@@ -42,6 +47,10 @@ bench-delta:
 
 bench-client:
 	$(PY) -m benchmarks.client_bench
+
+bench-churn:
+	$(PY) -c "from benchmarks.churn_bench import churn_rows; \
+	          print('\n'.join(churn_rows()))"
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

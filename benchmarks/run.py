@@ -15,8 +15,8 @@ import sys
 
 
 def main() -> None:
-    from . import client_bench, delta_bench, kernel_bench, paper_figures, \
-        scalability
+    from . import churn_bench, client_bench, delta_bench, kernel_bench, \
+        paper_figures, scalability
 
     rows = []
     rows += paper_figures.rows()
@@ -24,6 +24,7 @@ def main() -> None:
     rows += kernel_bench.rows()
     rows += delta_bench.rows()
     rows += client_bench.rows()
+    rows += churn_bench.rows()
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -3,6 +3,7 @@ from .bulk import DeltaSyncStats, delta_antientropy
 from .client import KVClient
 from .cluster import GetResult, KVCluster, PutAck
 from .context import CausalContext, EMPTY_CONTEXT
+from .gossip import GossipDriver, cluster_converged
 from .network import SimNetwork, Unavailable
 from .packed import PackedPayload, PackedVersionStore, StoreDigest, key_bucket
 from .replica import ReplicaNode
@@ -12,6 +13,7 @@ __all__ = [
     "KVCluster", "KVClient", "GetResult", "PutAck",
     "CausalContext", "EMPTY_CONTEXT",
     "SimNetwork", "Unavailable",
+    "GossipDriver", "cluster_converged",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
     "PackedVersionStore", "PackedPayload",
     "StoreDigest", "DeltaSyncStats", "delta_antientropy", "key_bucket",

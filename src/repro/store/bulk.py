@@ -135,9 +135,22 @@ def delta_antientropy(src: ReplicaNode, dst: ReplicaNode, *,
     dst_digest = dst_store.sync_digest()
     ranked, width, n_divergent = delta_plan(src_store, dst_digest,
                                             max_ranges=max_ranges)
-    # Phase-1 wire: each side's tree travels folded to the common width.
-    digest_bytes = 2 * dst_digest.fold(width).nbytes()
+    # Phase-1 wire: each side's tree travels folded to the common width,
+    # plus one 8-byte value root per side (the content check below).
+    digest_bytes = 2 * (dst_digest.fold(width).nbytes() + 8)
     if len(ranked) == 0:
+        if src_store.value_root() != dst_store.value_root():
+            # The §6.1 hashes cover clock+key only, so clock-equal/value-
+            # different slots (only reachable through non-protocol
+            # ``bulk_sync`` dicts) diff to zero divergent buckets.  The
+            # value roots disagree exactly then: run the full-payload
+            # round rather than silently reporting convergence.
+            payload = src_store.payload()
+            changed = db.receive_antientropy(payload,
+                                             mask_fn=_mask_fn(use_kernel))
+            return DeltaSyncStats(width, 0, 0, len(payload),
+                                  payload.nbytes(), digest_bytes, changed,
+                                  fallback=True)
         return DeltaSyncStats(width, 0, 0, 0, 0, digest_bytes, 0)
     payload = src_store.payload(key_ranges=ranked, ranges_width=width)
     changed = db.receive_antientropy(payload, mask_fn=_mask_fn(use_kernel))

@@ -81,7 +81,9 @@ class KVCluster:
         self.mechanism = mechanism
         # packed=None: array-resident clocks for DVV, objects otherwise
         # (ReplicaNode decides); packed=False forces the object backend —
-        # the conformance reference for the packed store.
+        # the conformance reference for the packed store.  Remembered so
+        # nodes added later (``add_node``) get the same backend.
+        self._packed = packed
         self.nodes: Dict[str, ReplicaNode] = {
             n: ReplicaNode(n, mechanism, packed=packed) for n in node_ids}
         self.replication = replication or len(node_ids)
@@ -90,15 +92,101 @@ class KVCluster:
         self.network = network or SimNetwork(seed=seed)
         self.clock_time = 0.0
         self.delta_range_budget = delta_range_budget
+        self.seed = seed
         self._ring_cache: Dict[str, List[str]] = {}
-        # Seeded round-robin gossip schedule (delta_antientropy_round):
-        # per-node start offsets + a round counter, so repeated rounds cycle
-        # every node through every peer deterministically.
+        # Seeded round-robin gossip schedule (delta_antientropy_round /
+        # gossip_tick): each node's start offset is a pure function of
+        # (seed, node id) — membership changes never reshuffle the schedule
+        # of surviving nodes, so churn cannot break seed determinism.
         self._gossip_step = 0
-        n = len(node_ids)
-        self._gossip_offset = {
-            node: random.Random(seed * 1_000_003 + i).randrange(max(1, n - 1))
-            for i, node in enumerate(node_ids)}
+        self._node_gossip_step: Dict[str, int] = {}
+        self._gossip_base_cache: Dict[str, int] = {}
+
+    # -- membership (dynamic: nodes join and leave at runtime) ----------------
+    def add_node(self, node_id: str, *, bootstrap: bool = True,
+                 bootstrap_ranges: Optional[int] = None,
+                 use_kernel: bool = False) -> List[DeltaSyncStats]:
+        """Join ``node_id`` to the cluster.
+
+        Key placement is rehashed (the ring cache is invalidated, so keys
+        whose top-``replication`` ring slice now includes the newcomer move
+        to it for future operations), and — unless ``bootstrap=False`` —
+        the new node catches up *warm* via ranked digest-diffed pulls from
+        every reachable peer (``bootstrap_node``), so it serves reads with
+        full causal state instead of empty version sets.  ``replication``
+        is a cluster parameter and does not change on join.
+        """
+        if node_id in self.nodes:
+            raise ValueError(f"node {node_id!r} already in cluster")
+        self.nodes[node_id] = ReplicaNode(node_id, self.mechanism,
+                                          packed=self._packed)
+        self._ring_cache.clear()
+        # a join is a topology change too: listeners (the gossip driver)
+        # adopt the newcomer immediately instead of on their next fire
+        self.network._topology_changed()
+        if bootstrap:
+            return self.bootstrap_node(node_id, max_ranges=bootstrap_ranges,
+                                       use_kernel=use_kernel)
+        return []
+
+    def remove_node(self, node_id: str, *,
+                    handoff: bool = True) -> List[DeltaSyncStats]:
+        """Depart ``node_id``: drop its replica, rehash placement, purge
+        messages addressed to it from the fabric.
+
+        A *planned* departure first hands the node's state off — one final
+        delta push to every reachable survivor — so writes for which it
+        held the only copy (e.g. quorum-1 writes acked during a partition)
+        survive the decommission.  ``handoff=False`` models a crash-style
+        removal; an unreachable/down node naturally hands off nothing.
+        Surviving nodes' gossip schedules are untouched (offsets are
+        per-node functions of the seed), so removal never reshuffles peer
+        sampling determinism."""
+        if node_id not in self.nodes:
+            raise KeyError(f"node {node_id!r} not in cluster")
+        if len(self.nodes) == 1:
+            raise ValueError("cannot remove the last node")
+        stats: List[DeltaSyncStats] = []
+        if handoff:
+            for peer in list(self.nodes):
+                if peer != node_id and \
+                        self.network.reachable(node_id, peer):
+                    stats.append(self.delta_antientropy(node_id, peer))
+        del self.nodes[node_id]
+        self._ring_cache.clear()
+        self._node_gossip_step.pop(node_id, None)
+        self.network.forget(node_id)
+        return stats
+
+    def bootstrap_node(self, node_id: str, *,
+                       max_ranges: Optional[int] = None,
+                       use_kernel: bool = False,
+                       max_passes: int = 64) -> List[DeltaSyncStats]:
+        """Warm catch-up for a (typically fresh) node: repeated ranked
+        digest-diffed delta pulls from every reachable peer, biggest ranges
+        first (``payload(key_ranges=...)`` does the slicing), until a full
+        pass over the peers changes nothing at the newcomer.  Progress is
+        measured by ``changed`` (the newcomer's sets growing toward the
+        union), which is finite — so the loop terminates even when peers
+        stay mutually divergent among themselves.  ``max_ranges`` bounds
+        one pull so a joining node can rate-limit its catch-up; uncapped,
+        two passes suffice (the second proves quiescence)."""
+        stats: List[DeltaSyncStats] = []
+        for _ in range(max_passes):
+            progress = False
+            for peer in list(self.nodes):
+                if peer == node_id or \
+                        not self.network.reachable(peer, node_id):
+                    continue
+                st = self.delta_antientropy(peer, node_id,
+                                            use_kernel=use_kernel,
+                                            max_ranges=max_ranges)
+                stats.append(st)
+                if st.changed:
+                    progress = True
+            if not progress:
+                break
+        return stats
 
     # -- placement (consistent-hash ring) -------------------------------------
     def replicas_for(self, key: str) -> List[str]:
@@ -294,13 +382,17 @@ class KVCluster:
                 for k in items}
 
     # -- background machinery ------------------------------------------------------
-    def deliver_replication(self, max_messages: Optional[int] = None) -> int:
-        """Flush queued coordinator→replica store messages."""
+    def deliver_replication(self, max_messages: Optional[int] = None,
+                            until: Optional[float] = None) -> int:
+        """Flush queued coordinator→replica store messages (``until`` limits
+        delivery to messages due by that simulated time — the gossip
+        driver's per-tick drain)."""
         def handler(msg):
             kind, payload = msg.payload
             assert kind == "store"
             self.nodes[msg.dst].receive_antientropy(payload)
-        return self.network.deliver(handler, max_messages=max_messages)
+        return self.network.deliver(handler, until=until,
+                                    max_messages=max_messages)
 
     def antientropy(self, src: str, dst: str,
                     keys: Optional[Sequence[str]] = None) -> None:
@@ -329,6 +421,56 @@ class KVCluster:
                                   use_kernel=use_kernel,
                                   max_ranges=max_ranges)
 
+    def _gossip_base(self, node: str) -> int:
+        """A node's gossip start offset: a pure function of (seed, node id),
+        stable under membership churn — joins and leaves never reshuffle
+        the rotation of surviving nodes."""
+        base = self._gossip_base_cache.get(node)
+        if base is None:
+            base = self._gossip_base_cache[node] = random.Random(
+                f"{self.seed}:{node}").randrange(1 << 30)
+        return base
+
+    def gossip_peers(self, node: str, k: int, step: int) -> List[str]:
+        """The ``k`` peers ``node`` pushes to at rotation ``step``, sampled
+        from *current* membership — departed nodes drop out of the rotation
+        naturally (they are simply absent), reachability is checked by the
+        caller.  Repeated steps cycle every node through all live peers."""
+        ids = list(self.nodes)
+        n = len(ids)
+        if node not in self.nodes or n < 2:
+            return []
+        i = ids.index(node)
+        peers = ids[i + 1:] + ids[:i]              # all others, rotated
+        k = max(1, min(k, n - 1))
+        off = (self._gossip_base(node) + step * k) % (n - 1)
+        return [peers[(off + j) % (n - 1)] for j in range(k)]
+
+    def gossip_tick(self, node: str, *, step: Optional[int] = None,
+                    fanout: int = 1, max_ranges: Optional[int] = None,
+                    use_kernel: bool = False
+                    ) -> List[Tuple[str, DeltaSyncStats]]:
+        """One node's bounded gossip pushes — the unit the continuous
+        ``GossipDriver`` fires per timer (its adaptation needs to know
+        which peer each round hit, hence ``(peer, stats)`` pairs).
+        ``step`` defaults to a per-node counter so hand-cranked ticks
+        still cycle all peers; ``max_ranges`` defaults to
+        ``delta_range_budget``.  Unreachable sampled peers are skipped
+        (the tick is best-effort)."""
+        if node not in self.nodes:
+            return []
+        if step is None:
+            step = self._node_gossip_step.get(node, 0)
+            self._node_gossip_step[node] = step + 1
+        if max_ranges is None:
+            max_ranges = self.delta_range_budget
+        out = []
+        for b in self.gossip_peers(node, fanout, step):
+            if self.network.reachable(node, b):
+                out.append((b, self.delta_antientropy(
+                    node, b, use_kernel=use_kernel, max_ranges=max_ranges)))
+        return out
+
     def delta_antientropy_round(self, *, use_kernel: bool = False,
                                 max_ranges: Optional[int] = None,
                                 fanout: Optional[int] = None
@@ -355,11 +497,8 @@ class KVCluster:
         step = self._gossip_step
         self._gossip_step += 1
         stats = []
-        for i, a in enumerate(ids):
-            peers = ids[i + 1:] + ids[:i]          # all others, rotated
-            off = (self._gossip_offset[a] + step * k) % (n - 1)
-            for j in range(k):
-                b = peers[(off + j) % (n - 1)]
+        for a in ids:
+            for b in self.gossip_peers(a, k, step):
                 if self.network.reachable(a, b):
                     stats.append(self.delta_antientropy(
                         a, b, use_kernel=use_kernel, max_ranges=max_ranges))

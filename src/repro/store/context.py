@@ -20,9 +20,12 @@ so the ceiling VV denotes exactly the union of the siblings' histories.
 
 Tokens encode to ``bytes`` (``to_bytes``/``from_bytes``) so real clients
 can carry them across processes; the DVV encoding is a fixed-layout binary
-record (O(R)), while residues fall back to pickle (the token is a trusted
-server artifact, mirroring how Riak vclocks travel base64'd through
-clients that must not interpret them).
+record (O(R)), while residues fall back to pickle (the token is a server
+artifact, mirroring how Riak vclocks travel base64'd through clients that
+must not interpret them).  Because tokens pass *through* clients, decoding
+is defensive: any malformed token fails with a clean ``ValueError`` and
+residue blobs are unpickled through a restricted loader that only admits
+this package's clock classes and plain containers — never callables.
 
 The token is deliberately *iterable as a clock set* — legacy code (and the
 formal-condition property tests) that treats a context as a set of clocks
@@ -31,6 +34,7 @@ whose history equals the union of the original siblings' histories.
 """
 from __future__ import annotations
 
+import io
 import pickle
 import struct
 import warnings
@@ -40,6 +44,38 @@ from typing import Any, FrozenSet, Iterable, Iterator, Tuple
 from ..core.dvv import DVV
 
 _MAGIC = b"DCX1"                    # wire-format tag + version
+
+#: Exactly the globals a residue blob may reference: the clock classes of
+#: the pluggable mechanisms plus plain containers.  Never callables like
+#: eval/exec/getattr, and never whole modules — pickle protocol ≥ 4
+#: resolves *dotted* names through ``find_class``, so a prefix allowance
+#: (e.g. all of ``repro.*``) would let ``repro.anything:os.system``
+#: through via the module's own imports.  Exact (module, name) pairs
+#: only, dots rejected.
+_SAFE_RESIDUE_GLOBALS = frozenset({
+    ("builtins", "frozenset"), ("builtins", "set"), ("builtins", "tuple"),
+    ("builtins", "list"), ("builtins", "dict"), ("builtins", "int"),
+    ("builtins", "float"), ("builtins", "complex"), ("builtins", "str"),
+    ("builtins", "bytes"), ("builtins", "bool"), ("builtins", "NoneType"),
+    ("repro.core.dvv", "DVV"),
+    ("repro.core.version_vector", "VV"),
+    ("repro.core.lww", "WallClock"),
+    ("repro.core.lww", "LamportClock"),
+    ("repro.core.causal_history", "CausalHistory"),
+})
+
+
+class _ResidueUnpickler(pickle.Unpickler):
+    """Unpickler for token residues restricted to the exact clock classes
+    and plain containers above.  Tokens are server artifacts, but they
+    travel through clients — a crafted ``__reduce__`` gadget in the blob
+    must be rejected, not executed."""
+
+    def find_class(self, module: str, name: str):
+        if "." not in name and (module, name) in _SAFE_RESIDUE_GLOBALS:
+            return super().find_class(module, name)
+        raise pickle.UnpicklingError(
+            f"token residue may not reference {module}.{name}")
 
 
 @dataclass(frozen=True)
@@ -146,22 +182,54 @@ class CausalContext:
 
     @staticmethod
     def from_bytes(data: bytes) -> "CausalContext":
-        if data[:4] != _MAGIC:
-            raise ValueError("not a CausalContext token")
+        """Decode a wire token.  Malformed input — empty, truncated at any
+        field boundary, bad magic, trailing garbage, undecodable ids — is
+        rejected with ``ValueError`` before any entry escapes: a client
+        handing us a corrupt token gets a clean error, never a context
+        holding half its causal history."""
+        if len(data) < 4 or data[:4] != _MAGIC:
+            raise ValueError("not a CausalContext token (bad magic)")
+        if len(data) < 7:
+            raise ValueError("truncated CausalContext token (header)")
         has_residue, count = struct.unpack_from("<BH", data, 4)
+        if has_residue not in (0, 1):
+            raise ValueError("corrupt CausalContext token (residue flag)")
         off = 7
         entries = []
-        for _ in range(count):
+        for i in range(count):
+            if off + 2 > len(data):
+                raise ValueError(
+                    f"truncated CausalContext token (entry {i} length)")
             (rlen,) = struct.unpack_from("<H", data, off)
             off += 2
-            rid = data[off: off + rlen].decode()
+            if off + rlen + 8 > len(data):
+                raise ValueError(
+                    f"truncated CausalContext token (entry {i} body)")
+            try:
+                rid = data[off: off + rlen].decode()
+            except UnicodeDecodeError as e:
+                raise ValueError(
+                    f"corrupt CausalContext token (entry {i} id)") from e
             off += rlen
             (n,) = struct.unpack_from("<Q", data, off)
             off += 8
             entries.append((rid, n))
         residue: Tuple[Any, ...] = ()
         if has_residue:
-            residue = pickle.loads(data[off:])
+            stream = io.BytesIO(data[off:])
+            try:
+                residue = _ResidueUnpickler(stream).load()
+            except Exception as e:
+                raise ValueError(
+                    "corrupt CausalContext token (residue)") from e
+            if stream.read(1):       # pickle STOPs early on trailing bytes
+                raise ValueError(
+                    "corrupt CausalContext token (trailing bytes)")
+            if not isinstance(residue, tuple):
+                raise ValueError(
+                    "corrupt CausalContext token (residue shape)")
+        elif off != len(data):
+            raise ValueError("corrupt CausalContext token (trailing bytes)")
         return CausalContext(entries=tuple(entries), residue=residue)
 
     def __repr__(self) -> str:

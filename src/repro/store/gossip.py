@@ -1,0 +1,328 @@
+"""Continuous, membership-aware gossip: the anti-entropy control loop.
+
+``KVCluster.delta_antientropy_round`` (PR 2/3) gives one *hand-cranked*
+digest-diffed push round; production anti-entropy is a loop that never
+stops while the replica set itself churns.  ``GossipDriver`` closes that
+loop off **simulated time** (GentleRain-style scheduling: rounds are tied
+to ``SimNetwork.advance``, not wall clocks):
+
+* **Per-node timers, seeded jitter** — every node owns an independent
+  next-fire timer on the SimNetwork heap; fire times are jittered by a
+  per-node ``random.Random(f"{seed}:{node}")`` stream so cadences desync
+  without losing determinism (same seed ⇒ identical fire schedule).
+* **Divergence-adaptive budgets** (the Okapi lesson: availability under
+  failure hinges on anti-entropy cost tracking *observed* divergence, not
+  a fixed cadence).  Each node's interval, ``fanout`` and ``max_ranges``
+  budget adapt to its own ``DeltaSyncStats``: ticks whose digests all
+  agree back the interval off multiplicatively (idle gossip decays to a
+  cheap heartbeat of digest roots) and decay ramped budgets; divergent
+  ticks snap the interval back to the base period; ticks that *saturate*
+  the range budget (more divergent buckets than the cap let travel)
+  double the budget and, at the cap, widen fanout — catch-up cost rises
+  to meet a divergence spike, then decays away after it.
+* **Churn-proof sampling** — peers come from ``KVCluster.gossip_peers``,
+  which reads *current* membership at every tick: departed nodes drop
+  out of the rotation naturally, joiners are picked up lazily (each fire
+  arms timers for any node it has not seen), and a fire for a node that
+  was removed is a no-op that disarms itself.  Down nodes stay armed at
+  the base period so recovery resumes gossip without external help.
+
+The driver is deliberately *pure control plane*: all data movement is the
+existing two-phase delta round (digest exchange → ranked divergent ranges
+→ sliced ``payload(key_ranges=...)`` apply), so everything the store layer
+guarantees about those rounds (byte-identical to full rounds, bounded by
+divergence) holds under the driver too.  See DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from .bulk import DeltaSyncStats
+from .cluster import KVCluster
+
+
+@dataclass
+class NodeGossip:
+    """Per-node adaptive scheduling state (all simulated-time units)."""
+
+    interval: float               # current fire period (adapts)
+    fanout: int                   # peers pushed to per tick (adapts)
+    max_ranges: int               # per-push range budget (adapts)
+    rng: random.Random            # seeded per-node jitter stream
+    step: int = 0                 # rotation counter for gossip_peers
+    timer: Optional[int] = None   # armed SimNetwork timer id
+    fire_at: float = 0.0          # when that timer is due
+    ticks: int = 0
+    idle_ticks: int = 0           # consecutive all-converged ticks
+
+
+class GossipDriver:
+    """Runs delta anti-entropy continuously off ``SimNetwork`` time.
+
+    Construct it over a cluster and ``network.advance(dt)`` (or
+    ``driver.run_for(dt)``) does the rest: timers fire, nodes push deltas
+    to rotating peer samples, budgets adapt, membership changes are picked
+    up.  ``stop()`` cancels all timers (the driver can be restarted with
+    ``start()``).
+    """
+
+    def __init__(self, cluster: KVCluster, *, period: float = 10.0,
+                 max_period: Optional[float] = None, backoff: float = 1.6,
+                 jitter: float = 0.25, fanout: int = 1, max_fanout: int = 3,
+                 max_ranges: Optional[int] = None,
+                 max_ranges_cap: int = 1024, adapt: bool = True,
+                 deliver: bool = True, use_kernel: bool = False,
+                 seed: Optional[int] = None, autostart: bool = True):
+        if period <= 0:
+            raise ValueError("period must be positive")
+        if not 0 <= jitter < 1:
+            # jitter >= 1 can yield zero/negative delays — a zero-delay
+            # self-re-arming timer livelocks SimNetwork.advance
+            raise ValueError("jitter must be in [0, 1)")
+        if backoff < 1:
+            raise ValueError("backoff must be >= 1")
+        self.cluster = cluster
+        self.period = float(period)
+        self.max_period = float(max_period if max_period is not None
+                                else 8.0 * period)
+        if self.max_period < self.period:
+            raise ValueError("max_period must be >= period")
+        self.backoff = backoff
+        self.jitter = jitter
+        self.fanout = max(1, fanout)
+        self.max_fanout = max(self.fanout, max_fanout)
+        self.base_ranges = (cluster.delta_range_budget
+                            if max_ranges is None else max_ranges)
+        self.max_ranges_cap = max(self.base_ranges, max_ranges_cap)
+        self.adapt = adapt
+        self.deliver = deliver
+        self.use_kernel = use_kernel
+        self.seed = cluster.seed if seed is None else seed
+        self._state: Dict[str, NodeGossip] = {}
+        self._running = False
+        # aggregate accounting (the churn benchmark's wire/round meter)
+        self.ticks = 0
+        self.rounds = 0
+        self.digest_bytes = 0
+        self.payload_bytes = 0
+        self.payload_slots = 0
+        self.fallbacks = 0
+        self.divergent_ticks = 0
+        if autostart:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        self._running = True
+        net = self.cluster.network
+        if self._on_topology not in net.topology_listeners:
+            net.topology_listeners.append(self._on_topology)
+        self._adopt_new_nodes()
+        # restart path: re-arm known nodes whose timers stop() cancelled
+        for node, st in list(self._state.items()):
+            if node in self.cluster.nodes and st.timer is None:
+                self._arm(node)
+
+    def stop(self) -> None:
+        self._running = False
+        net = self.cluster.network
+        if self._on_topology in net.topology_listeners:
+            net.topology_listeners.remove(self._on_topology)
+        for st in self._state.values():
+            if st.timer is not None:
+                self.cluster.network.cancel(st.timer)
+                st.timer = None
+
+    def run_for(self, duration: float) -> None:
+        """Advance simulated time, firing gossip along the way."""
+        self.cluster.network.advance(duration)
+
+    # -- scheduling --------------------------------------------------------
+
+    def _adopt_new_nodes(self) -> None:
+        """Arm timers for any cluster node the driver has not seen yet —
+        how joiners enter the loop without the cluster knowing about us —
+        and prune state of departed nodes (normally their own fire
+        self-prunes, but a removal while the driver is stopped leaves a
+        stale disarmed entry that would shadow a later re-join)."""
+        for node in [n for n in self._state
+                     if n not in self.cluster.nodes]:
+            st = self._state.pop(node)
+            if st.timer is not None:
+                self.cluster.network.cancel(st.timer)
+        for node in self.cluster.nodes:
+            if node not in self._state:
+                self._state[node] = NodeGossip(
+                    interval=self.period, fanout=self.fanout,
+                    max_ranges=self.base_ranges,
+                    rng=random.Random(f"{self.seed}:{node}"))
+                self._arm(node)
+
+    def _arm(self, node: str, interval: Optional[float] = None) -> None:
+        if not self._running:
+            return
+        st = self._state[node]
+        base = st.interval if interval is None else interval
+        delay = base * (1.0 + self.jitter * (2.0 * st.rng.random() - 1.0))
+        st.timer = self.cluster.network.schedule(
+            delay, lambda: self._fire(node))
+        st.fire_at = self.cluster.network.now + delay
+
+    def _wake(self, node: str) -> None:
+        """Divergence wake-up: a round just proved ``node`` holds (or
+        lacks) state its peer does not — snap its cadence back to the base
+        period so reconciliation propagates at gossip speed instead of
+        waiting out a backed-off timer.  Only ever *shortens* the wait, so
+        repeated wakes cannot starve a node of its own fires."""
+        st = self._state.get(node)
+        if st is None or node not in self.cluster.nodes:
+            return
+        st.interval = self.period
+        st.idle_ticks = 0
+        horizon = self.period * (1.0 + self.jitter)
+        if st.timer is not None and \
+                st.fire_at - self.cluster.network.now > horizon:
+            self.cluster.network.cancel(st.timer)
+            self._arm(node)
+
+    def _on_topology(self) -> None:
+        """Topology changed (join/partition/heal/fail/recover/depart):
+        adopt any joiner immediately, and — when adapting — snap every
+        backed-off cadence to the base period, since a healed link or a
+        new member may be hiding fresh divergence.  Converged nodes pay
+        one extra digest round and back straight off again."""
+        if not self._running:
+            return
+        self._adopt_new_nodes()
+        if not self.adapt:
+            return
+        for node in list(self._state):
+            self._wake(node)
+
+    def _fire(self, node: str) -> None:
+        st = self._state.get(node)
+        if st is None:
+            return
+        st.timer = None
+        if node not in self.cluster.nodes:      # departed: disarm for good
+            del self._state[node]
+            return
+        self._adopt_new_nodes()
+        self.ticks += 1
+        st.ticks += 1
+        if self.deliver:
+            # drain replication messages due by now — the driver doubles as
+            # the cluster's background delivery pump
+            self.cluster.deliver_replication(until=self.cluster.network.now)
+        if node in self.cluster.network.down:
+            # a down node cannot push; stay armed at the base period so
+            # gossip resumes by itself on recovery
+            self._arm(node, self.period)
+            return
+        rounds = []
+        for peer, r in self.cluster.gossip_tick(
+                node, step=st.step, fanout=st.fanout,
+                max_ranges=st.max_ranges, use_kernel=self.use_kernel):
+            rounds.append(r)
+            if self.adapt and (r.buckets_divergent or r.changed):
+                self._wake(peer)     # it knows it differs too: drain fast
+        st.step += 1
+        self._account(rounds)
+        if self.adapt:
+            self._adapt(st, rounds)
+        self._arm(node)
+
+    # -- adaptation --------------------------------------------------------
+
+    def _account(self, rounds: Sequence[DeltaSyncStats]) -> None:
+        self.rounds += len(rounds)
+        for r in rounds:
+            self.digest_bytes += r.digest_bytes
+            self.payload_bytes += r.payload_bytes
+            self.payload_slots += r.payload_slots
+            if r.fallback:
+                self.fallbacks += 1
+
+    def _adapt(self, st: NodeGossip, rounds: Sequence[DeltaSyncStats]
+               ) -> None:
+        """Backoff when digests agree; snap back and ramp budgets when the
+        observed divergence says one tick's budget was not enough.
+
+        A fallback round that changed nothing is *convergence* evidence —
+        object backends run every round as a full-payload fallback, and
+        treating bare ``fallback`` as divergence would pin their cadence
+        at the base period forever (full-store payloads per tick on an
+        idle cluster).  The unreconcilable value-root case likewise backs
+        off rather than re-shipping the store at full speed; the rounds
+        keep reporting ``fallback=True`` for observability."""
+        divergent = any(r.buckets_divergent > 0 or r.changed > 0
+                        for r in rounds)
+        saturated = any(r.buckets_sent >= st.max_ranges
+                        and r.buckets_divergent > r.buckets_sent
+                        for r in rounds)
+        if divergent:
+            self.divergent_ticks += 1
+            st.idle_ticks = 0
+            st.interval = self.period
+            if saturated:
+                if st.max_ranges < self.max_ranges_cap:
+                    st.max_ranges = min(2 * st.max_ranges,
+                                        self.max_ranges_cap)
+                else:                    # budget already maxed: go wider
+                    st.fanout = min(st.fanout + 1, self.max_fanout)
+        else:
+            st.idle_ticks += 1
+            st.interval = min(st.interval * self.backoff, self.max_period)
+            # ramped budgets decay back toward the configured base
+            st.max_ranges = max(self.base_ranges, st.max_ranges // 2)
+            if st.fanout > self.fanout:
+                st.fanout -= 1
+
+    # -- introspection -----------------------------------------------------
+
+    def wire_bytes(self) -> int:
+        """Total gossip wire cost so far (digest phase + payload phase)."""
+        return self.digest_bytes + self.payload_bytes
+
+    def node_state(self, node: str) -> NodeGossip:
+        return self._state[node]
+
+    def intervals(self) -> Dict[str, float]:
+        return {n: st.interval for n, st in self._state.items()
+                if n in self.cluster.nodes}
+
+    def __repr__(self) -> str:
+        return (f"<GossipDriver nodes={len(self._state)} ticks={self.ticks} "
+                f"rounds={self.rounds} wire={self.wire_bytes()}B>")
+
+
+def cluster_converged(cluster: KVCluster) -> bool:
+    """True iff every pair of live nodes holds identical state — digest
+    trees (and value roots) for packed backends, version-set dicts for
+    object backends.  The quiescence check churn tests and the benchmark
+    poll between gossip ticks."""
+    nodes = [cluster.nodes[n] for n in cluster.nodes
+             if n not in cluster.network.down]
+    if len(nodes) < 2:
+        return True
+    if all(n.is_packed for n in nodes):
+        ref = nodes[0].backend.packed
+        ref_digest = ref.sync_digest()
+        for other in nodes[1:]:
+            st = other.backend.packed
+            if len(ref_digest.diff(st.sync_digest())) != 0:
+                return False
+            if ref.value_root() != st.value_root():
+                return False
+        return True
+    keys = set()
+    for n in nodes:
+        keys |= set(getattr(n.backend, "store", {}).keys())
+    return all(n.versions(k) == nodes[0].versions(k)
+               for k in keys for n in nodes[1:])
+
+
+__all__ = ["GossipDriver", "NodeGossip", "cluster_converged"]

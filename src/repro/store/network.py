@@ -10,9 +10,16 @@ fault-tolerance story of the framework):
   *queued*, and drivers/tests decide when (whether) they are delivered.
   Interleaving control is what exposes the causality bugs of the §3
   baselines.
+
+The fabric also carries *timers* (``schedule``/``cancel``): callbacks keyed
+to simulated time, fired in deterministic ``(fire_at, seq)`` order by
+``advance``.  They are what lets the gossip driver (store/gossip.py) run
+anti-entropy continuously off SimNetwork time instead of being hand-cranked
+— simulated-clock scheduling, GentleRain-style, rather than wall time.
 """
 from __future__ import annotations
 
+import heapq
 import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, FrozenSet, List, Optional, Set, Tuple
@@ -77,20 +84,56 @@ class SimNetwork:
         self.delivered = 0
         self.dropped = 0
         self.bytes_sent = 0
+        # timers: (fire_at, seq, callback) min-heap; cancellation is lazy
+        # (cancelled ids are skipped when popped) so cancel is O(1)
+        self._timers: List[Tuple[float, int, Callable[[], None]]] = []
+        self._timer_seq = 0
+        self._cancelled: Set[int] = set()
+        self.timers_fired = 0
+        # synchronous observers of reachability changes (partition/heal/
+        # fail/recover/forget) — how the gossip driver snaps backed-off
+        # cadences the moment the topology shifts, the way a real
+        # membership layer reacts to connection events
+        self.topology_listeners: List[Callable[[], None]] = []
 
     # -- topology control ----------------------------------------------------
+    def _topology_changed(self) -> None:
+        for listener in list(self.topology_listeners):
+            listener()
+
     def partition(self, *groups: Set[str]) -> None:
         """Split the cluster into isolated groups (None heals)."""
         self.partition_groups = [set(g) for g in groups]
+        self._topology_changed()
 
     def heal(self) -> None:
         self.partition_groups = None
+        self._topology_changed()
 
     def fail_node(self, node: str) -> None:
         self.down.add(node)
+        self._topology_changed()
 
     def recover_node(self, node: str) -> None:
         self.down.discard(node)
+        self._topology_changed()
+
+    def forget(self, node: str) -> int:
+        """Remove a *departed* node from the fabric: purge queued messages
+        addressed TO it (no destination exists — they would retry forever)
+        and drop it from the down set.  Messages it already *sent* stay
+        queued — their destinations are alive, and dropping them would
+        destroy acknowledged writes in flight — so the node also stays in
+        any partition group as a ghost entry: stripping it would make
+        those kept sends unreachable (``reachable`` finds the absent src
+        in no group) until a heal.  Ghost entries are harmless for live
+        pairs and vanish with the next ``partition``/``heal``.
+        Returns the number of purged messages."""
+        before = len(self.queue)
+        self.queue = [m for m in self.queue if m.dst != node]
+        self.down.discard(node)
+        self._topology_changed()
+        return before - len(self.queue)
 
     def reachable(self, a: str, b: str) -> bool:
         if a in self.down or b in self.down:
@@ -146,5 +189,39 @@ class SimNetwork:
     def pending(self) -> int:
         return len(self.queue)
 
+    # -- timers (simulated-clock scheduling) -----------------------------------
+    def schedule(self, delay: float, callback: Callable[[], None]) -> int:
+        """Arm ``callback`` to fire ``delay`` simulated seconds from now.
+        Returns a timer id for ``cancel``.  Callbacks run inside ``advance``
+        and may schedule further timers (the re-arming gossip pattern)."""
+        self._timer_seq += 1
+        heapq.heappush(self._timers,
+                       (self.now + max(0.0, delay), self._timer_seq, callback))
+        return self._timer_seq
+
+    def cancel(self, timer_id: int) -> None:
+        self._cancelled.add(timer_id)
+
+    def timers_pending(self) -> int:
+        return sum(1 for (_, seq, _) in self._timers
+                   if seq not in self._cancelled)
+
     def advance(self, dt: float) -> None:
-        self.now += dt
+        """Move simulated time forward, firing due timers in deterministic
+        ``(fire_at, seq)`` order.  ``now`` tracks each timer as it fires, so
+        a callback observing ``now`` sees its own fire time."""
+        target = self.now + dt
+        while self._timers and self._timers[0][0] <= target:
+            fire_at, seq, callback = heapq.heappop(self._timers)
+            if seq in self._cancelled:
+                self._cancelled.discard(seq)
+                continue
+            self.now = max(self.now, fire_at)
+            self.timers_fired += 1
+            callback()
+        self.now = target
+
+    def run_until(self, t: float) -> None:
+        """Advance to absolute simulated time ``t`` (no-op if in the past)."""
+        if t > self.now:
+            self.advance(t - self.now)

@@ -82,6 +82,14 @@ def _hash_str(s: str) -> int:
         hashlib.blake2b(s.encode(), digest_size=8).digest(), "little")
 
 
+def _hash_value(value: Any) -> int:
+    """Stable 64-bit hash of a slot's *value content* (priced at its repr,
+    like every serialization stand-in in this codebase).  Feeds the store's
+    value root — the content check that closes the §6.1 clock+key digest
+    gap for non-protocol stores (see ``value_root``)."""
+    return _hash_str(repr(value))
+
+
 def ceiling_from_rows(vv: np.ndarray, dot_id: np.ndarray, dot_n: np.ndarray
                       ) -> np.ndarray:
     """Per-replica ceiling ⌈S⌉ over packed clock rows: column max with the
@@ -258,6 +266,12 @@ class PackedVersionStore:
         self.slot_hash = np.zeros(_INITIAL_SLOTS, _U64)
         self.digest = np.zeros(n_buckets, _U64)
         self._bucket_live = np.zeros(n_buckets, np.int64)
+        # value root: xor-fold over live slots of mix(slot_hash ^ value
+        # hash) — content equality beyond the clock+key digest (§6.1 covers
+        # clocks only; clock-equal/value-different slots are invisible to
+        # ``digest`` but flip this root).  Maintained with the digests.
+        self.val_hash = np.zeros(_INITIAL_SLOTS, _U64)
+        self._value_root = 0
         self._replica_hash: List[int] = []            # aligned with replica_ids
         self._key_hash = np.zeros(_INITIAL_KEYS, _U64)    # aligned with keys
         self._key_bucket = np.zeros(_INITIAL_KEYS, np.int32)
@@ -313,6 +327,7 @@ class PackedVersionStore:
         self.key_ix = np.pad(self.key_ix, (0, pad), constant_values=-1)
         self.valid = np.pad(self.valid, (0, pad))
         self.slot_hash = np.pad(self.slot_hash, (0, pad))
+        self.val_hash = np.pad(self.val_hash, (0, pad))
         self.wall = np.pad(self.wall, (0, pad))
         self.values.extend([None] * pad)
 
@@ -333,6 +348,7 @@ class PackedVersionStore:
         self.dot_n[:n] = self.dot_n[keep]
         self.key_ix[:n] = self.key_ix[keep]
         self.slot_hash[:n] = self.slot_hash[keep]
+        self.val_hash[:n] = self.val_hash[keep]
         self.wall[:n] = self.wall[keep]
         self.values[:n] = [self.values[s] for s in keep]
         self.valid[:n] = True
@@ -431,6 +447,8 @@ class PackedVersionStore:
         b = self._key_bucket[self.key_ix[s]]
         np.bitwise_xor.at(self.digest, b, self.slot_hash[s])
         np.subtract.at(self._bucket_live, b, 1)
+        self._value_root ^= int(np.bitwise_xor.reduce(
+            _mix64(self.slot_hash[s] ^ self.val_hash[s])))
 
     def sync_digest(self) -> StoreDigest:
         """Snapshot the digest tree — phase 1 of a delta round.
@@ -440,6 +458,18 @@ class PackedVersionStore:
         if not self.track_digests:
             self.rebuild_digests()
         return StoreDigest(self.digest.copy())
+
+    def value_root(self) -> int:
+        """64-bit root of the store's *value content* (clock+key+value),
+        maintained incrementally beside the digest tree.  Equal stores
+        always agree; clock-equal/value-different slots — impossible under
+        the protocol (a clock names one write), possible in stores fed
+        arbitrary ``bulk_sync`` dicts — disagree here while the §6.1 clock
+        digests collide, which is what routes delta rounds to the
+        full-round fallback (DESIGN.md §6.1)."""
+        if not self.track_digests:
+            self.rebuild_digests()
+        return self._value_root
 
     def bucket_counts(self, width: Optional[int] = None) -> np.ndarray:
         """Live slots per bucket at ``width`` (default: this store's) — the
@@ -472,7 +502,9 @@ class PackedVersionStore:
                 self._key_hash[:n] & _U64(self.n_buckets - 1)).astype(np.int32)
             self._rebuild_bucket_index()
             if self.track_digests:
-                self.rebuild_digests()
+                # width growth: slot/value hashes are width-invariant and
+                # incrementally maintained — only re-bucket them
+                self.rebuild_digests(values_too=False)
 
     def _rebuild_bucket_index(self) -> None:
         """Recompute the bucket→slot index from slot content (O(live))."""
@@ -492,17 +524,22 @@ class PackedVersionStore:
         got = {b: set(v) for b, v in self._bucket_slots.items() if v}
         return expect == got
 
-    def rebuild_digests(self) -> np.ndarray:
+    def rebuild_digests(self, *, values_too: bool = True) -> np.ndarray:
         """Recompute buckets and live counts from slot content (in place).
 
         The incremental state must always equal this recomputation —
         ``check_digests`` asserts it in tests; calling this repairs a store
         whose digest state was corrupted (e.g. the collision probe).
+        ``values_too=False`` trusts the incrementally-maintained per-slot
+        value hashes (the bucket-width growth path: neither slot hashes
+        nor value hashes depend on the width, but the per-value rehash is
+        an O(live) Python loop worth skipping there).
         """
         live = np.flatnonzero(self.valid[: self.n_slots])
         R = self.n_replicas
         self.digest = np.zeros(self.n_buckets, _U64)
         self._bucket_live = np.zeros(self.n_buckets, np.int64)
+        self._value_root = 0
         if len(live):
             kixs = self.key_ix[live]
             hashes = self._slot_hash_rows(
@@ -511,19 +548,27 @@ class PackedVersionStore:
             buckets = self._key_bucket[kixs]
             np.bitwise_xor.at(self.digest, buckets, hashes)
             np.add.at(self._bucket_live, buckets, 1)
+            if values_too:
+                self.val_hash[live] = np.asarray(
+                    [_hash_value(self.values[int(s)]) for s in live], _U64)
+            self._value_root = int(np.bitwise_xor.reduce(
+                _mix64(hashes ^ self.val_hash[live])))
         return self.digest
 
     def check_digests(self) -> bool:
         """True iff the incremental digest state matches a full recompute."""
         if not self.check_bucket_index():
             return False
-        saved = (self.digest, self.slot_hash.copy(), self._bucket_live)
+        saved = (self.digest, self.slot_hash.copy(), self._bucket_live,
+                 self.val_hash.copy(), self._value_root)
         try:
             rebuilt = self.rebuild_digests()
             return (np.array_equal(rebuilt, saved[0])
-                    and np.array_equal(self._bucket_live, saved[2]))
+                    and np.array_equal(self._bucket_live, saved[2])
+                    and self._value_root == saved[4])
         finally:
-            self.digest, self.slot_hash, self._bucket_live = saved
+            (self.digest, self.slot_hash, self._bucket_live,
+             self.val_hash, self._value_root) = saved
 
     # -- boundary codec (object clocks at the client API edge only) --------
 
@@ -611,6 +656,9 @@ class PackedVersionStore:
                 self.dot_n[s: s + 1], self.key_ix[s: s + 1])[0]
             self.digest[bucket] ^= self.slot_hash[s]
             self._bucket_live[bucket] += 1
+            self.val_hash[s] = _U64(_hash_value(value))
+            self._value_root ^= int(_mix64(self.slot_hash[s]
+                                           ^ self.val_hash[s]))
         return s
 
     def _index_kill(self, slots: np.ndarray) -> None:
@@ -981,6 +1029,11 @@ class PackedVersionStore:
                 self.slot_hash[dst] = new_hashes
                 np.bitwise_xor.at(self.digest, new_buckets, new_hashes)
                 np.add.at(self._bucket_live, new_buckets, 1)
+                vhs = np.asarray([_hash_value(payload.values[int(r)])
+                                  for r in new_rows], _U64)
+                self.val_hash[dst] = vhs
+                self._value_root ^= int(np.bitwise_xor.reduce(
+                    _mix64(new_hashes ^ vhs)))
             for i, row in enumerate(new_rows):
                 self.values[s0 + i] = payload.values[int(row)]
                 self._slots_by_key[int(kix_new[i])].append(s0 + i)
@@ -1013,6 +1066,8 @@ class PackedVersionStore:
         out._key_index = dict(self._key_index)
         out._slots_by_key = {k: list(v) for k, v in self._slots_by_key.items()}
         out.slot_hash = self.slot_hash.copy()
+        out.val_hash = self.val_hash.copy()
+        out._value_root = self._value_root
         out.digest = self.digest.copy()
         out._bucket_live = self._bucket_live.copy()
         out._replica_hash = list(self._replica_hash)

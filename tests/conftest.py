@@ -1,0 +1,23 @@
+"""Shared test configuration: hypothesis profiles.
+
+The scheduled CI lane exports ``HYPOTHESIS_PROFILE=ci``; registering the
+profile here keeps that opt-in from erroring and relaxes the health
+checks for the long fault-injection schedules (per-test ``@settings``
+still pin their own example budgets).  Everything guards on the import:
+hypothesis is an optional dev dependency and the deterministic pinned
+phases of every suite run without it.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", deadline=None, print_blob=True,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large,
+                               HealthCheck.filter_too_much])
+    if os.environ.get("HYPOTHESIS_PROFILE") == "ci":
+        settings.load_profile("ci")
+except ImportError:
+    pass

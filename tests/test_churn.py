@@ -1,0 +1,291 @@
+"""Randomized churn conformance: the store under a changing universe.
+
+One schedule interpreter drives *everything the system can do at once* —
+puts (with and without causal context), gets, partitions, heals, node
+failures/recoveries, joins (with warm bootstrap) and departures — against
+a cluster whose gossip runs continuously off simulated time
+(``GossipDriver``).  After the schedule, the world is quiesced (heal,
+recover, drain, gossip to convergence) and three properties must hold:
+
+* **replica agreement** — every live replica holds the identical sibling
+  set for every key (and ``cluster_converged`` says so);
+* **backend agreement** — the packed int32 store and the object-clock
+  store, driven by the same schedule, end observationally equal
+  (version sets, metadata sizes, resolved register values);
+* **seed determinism** — the same seed replays the identical message
+  trace, byte for byte, timers included (churn must not introduce
+  iteration-order or hash-order nondeterminism anywhere).
+
+The hypothesis phase (``slow``+``churn`` markers — the ``make
+test-churn`` lane is its dedicated home) fuzzes schedules; a few pinned
+seeds run in tier-1 so the machinery never rots unexercised.
+"""
+import random
+
+import pytest
+
+from repro.core import DVV_MECHANISM
+from repro.store import (GossipDriver, KVCluster, SimNetwork, Unavailable,
+                         cluster_converged)
+
+pytestmark = pytest.mark.churn
+
+KEYS = tuple(f"k{i}" for i in range(5))
+BASE_NODES = ("n0", "n1", "n2")
+MAX_NODES = 6
+
+
+# ---------------------------------------------------------------------------
+# The schedule interpreter (shared by both backends and the fuzzer).
+# ---------------------------------------------------------------------------
+
+def _run_schedule(seed, ops, packed, quiesce=True):
+    """Interpret one churn schedule.  All choices are resolved against
+    *current* membership (indices mod the live node list), so the same op
+    list is meaningful whatever the interleaving did to the cluster."""
+    net = SimNetwork(seed=seed)
+    c = KVCluster(BASE_NODES, DVV_MECHANISM, packed=packed, network=net,
+                  seed=seed)
+    driver = GossipDriver(c, period=6.0, seed=seed)
+    contexts = {}
+    next_id = len(BASE_NODES)
+    for t, op in enumerate(ops):
+        kind = op[0]
+        nodes = list(c.nodes)
+        if kind == "put":
+            _, ki, ni, use_ctx = op
+            node = nodes[ni % len(nodes)]
+            key = KEYS[ki % len(KEYS)]
+            ctx = contexts.get((node, key)) if use_ctx else None
+            try:
+                c.put(key, f"v{t}", context=ctx, via=node, coordinator=node)
+            except Unavailable:
+                pass
+        elif kind == "get":
+            _, ki, ni = op
+            node = nodes[ni % len(nodes)]
+            key = KEYS[ki % len(KEYS)]
+            try:
+                contexts[(node, key)] = c.get(key, via=node).context
+            except Unavailable:
+                pass
+        elif kind == "partition":
+            _, p = op
+            g1 = {n for i, n in enumerate(nodes) if (i + p) % 2}
+            g2 = set(nodes) - g1
+            if g1 and g2:
+                net.partition(g1, g2)
+        elif kind == "heal":
+            net.heal()
+        elif kind == "fail":
+            _, ni = op
+            node = nodes[ni % len(nodes)]
+            if len(net.down) < len(nodes) - 1:   # keep one node alive
+                net.fail_node(node)
+        elif kind == "recover":
+            _, ni = op
+            net.recover_node(nodes[ni % len(nodes)])
+        elif kind == "add":
+            if len(c.nodes) < MAX_NODES:
+                c.add_node(f"n{next_id}")
+                next_id += 1
+        elif kind == "remove":
+            _, ni = op
+            if len(c.nodes) > 2:
+                c.remove_node(nodes[ni % len(nodes)])
+        elif kind == "advance":
+            _, dt = op
+            driver.run_for(float(dt))
+        elif kind == "deliver":
+            c.deliver_replication()
+        else:                                    # pragma: no cover
+            raise AssertionError(op)
+    if quiesce:
+        net.heal()
+        for n in list(net.down):
+            net.recover_node(n)
+        c.deliver_replication()
+        driver.run_for(60.0 * len(c.nodes))
+        # belt and braces: bounded explicit rounds prove a fixpoint even
+        # if the adaptive cadence backed off right before the deadline
+        for _ in range(len(c.nodes) + 1):
+            c.delta_antientropy_round()
+    return c, driver
+
+
+def _assert_replicas_agree(c, tag):
+    assert cluster_converged(c), tag
+    for k in KEYS:
+        ref = None
+        for n in c.nodes:
+            vs = c.nodes[n].versions(k)
+            if ref is None:
+                ref = vs
+            assert vs == ref, (tag, n, k)
+
+
+def _assert_backends_agree(cp, co, tag):
+    assert list(cp.nodes) == list(co.nodes), tag
+    for k in KEYS:
+        for n in cp.nodes:
+            vp, vo = cp.nodes[n].versions(k), co.nodes[n].versions(k)
+            assert vp == vo, (tag, n, k, vp, vo)
+            assert cp.nodes[n].metadata_size(k) == \
+                co.nodes[n].metadata_size(k), (tag, n, k)
+        gp, go = cp.get(k), co.get(k)
+        assert gp.values == go.values, (tag, k)
+        assert gp.value == go.value, (tag, k)
+        assert gp.context == go.context, (tag, k)
+
+
+def _conformance(seed, ops, tag):
+    cp, _ = _run_schedule(seed, ops, packed=True)
+    co, _ = _run_schedule(seed, ops, packed=False)
+    _assert_replicas_agree(cp, ("packed", tag))
+    _assert_replicas_agree(co, ("object", tag))
+    _assert_backends_agree(cp, co, tag)
+
+
+def _random_ops(seed, n_ops=40):
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(n_ops):
+        p = rng.random()
+        if p < 0.35:
+            ops.append(("put", rng.randrange(8), rng.randrange(8),
+                        rng.random() < 0.5))
+        elif p < 0.50:
+            ops.append(("get", rng.randrange(8), rng.randrange(8)))
+        elif p < 0.58:
+            ops.append(("partition", rng.randrange(1, 6)))
+        elif p < 0.64:
+            ops.append(("heal",))
+        elif p < 0.70:
+            ops.append(("fail", rng.randrange(8)))
+        elif p < 0.76:
+            ops.append(("recover", rng.randrange(8)))
+        elif p < 0.81:
+            ops.append(("add",))
+        elif p < 0.86:
+            ops.append(("remove", rng.randrange(8)))
+        elif p < 0.96:
+            ops.append(("advance", rng.randrange(1, 25)))
+        else:
+            ops.append(("deliver",))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 pinned schedules (fast lane: the machinery never rots).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_churn_conformance_pinned(seed):
+    _conformance(seed, _random_ops(seed), seed)
+
+
+def test_churn_heavy_membership_schedule():
+    """A hand-written worst case: join during partition, write to the
+    joiner, depart an original node while its writes are still in flight."""
+    ops = [
+        ("put", 0, 0, False), ("put", 1, 1, False), ("advance", 10),
+        ("partition", 1), ("put", 0, 0, True), ("add",),
+        ("put", 2, 3, False),                # write lands on the joiner
+        ("advance", 15), ("heal",), ("add",),
+        ("fail", 1), ("put", 3, 0, False), ("advance", 20),
+        ("remove", 1),                       # depart one of the originals
+        ("recover", 1), ("put", 4, 2, True), ("advance", 30),
+    ]
+    _conformance(3, ops, "heavy-membership")
+
+
+def test_same_seed_identical_message_trace():
+    """The seed-determinism probe: two runs of one seed produce the same
+    message trace (src, dst, kind, size, send-time), the same timer count,
+    and the same wire totals — churn introduces no hidden ordering."""
+    from repro.store.network import payload_nbytes
+
+    def run_with_trace():
+        trace = []
+        orig_send = SimNetwork.send
+
+        def send(self, src, dst, payload):
+            ok = orig_send(self, src, dst, payload)
+            trace.append((round(self.now, 9), src, dst, payload[0],
+                          payload_nbytes(payload), ok))
+            return ok
+
+        SimNetwork.send = send
+        try:
+            c, d = _run_schedule(17, _random_ops(17, 50), packed=True)
+        finally:
+            SimNetwork.send = orig_send
+        return trace, c, d
+
+    t1, c1, d1 = run_with_trace()
+    t2, c2, d2 = run_with_trace()
+    assert t1 == t2
+    assert c1.network.timers_fired == c2.network.timers_fired
+    assert c1.network.bytes_sent == c2.network.bytes_sent
+    assert (d1.ticks, d1.rounds, d1.wire_bytes()) == \
+        (d2.ticks, d2.rounds, d2.wire_bytes())
+    for k in KEYS:
+        for n in c1.nodes:
+            assert c1.nodes[n].versions(k) == c2.nodes[n].versions(k)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis phase: ≥200 randomized schedules across BOTH backends
+# (`make test-churn`; deselected from tier-1 via the slow marker).
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    _op = st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),               # twice: writes dominate
+        st.tuples(st.just("get"), st.integers(0, 7), st.integers(0, 7)),
+        st.tuples(st.just("partition"), st.integers(1, 5)),
+        st.tuples(st.just("heal")),
+        st.tuples(st.just("fail"), st.integers(0, 7)),
+        st.tuples(st.just("recover"), st.integers(0, 7)),
+        st.tuples(st.just("add")),
+        st.tuples(st.just("remove"), st.integers(0, 7)),
+        st.tuples(st.just("advance"), st.integers(1, 25)),
+        st.tuples(st.just("advance"), st.integers(1, 25)),
+        st.tuples(st.just("deliver")),
+    )
+
+    # slow + churn only (no `property` marker): the churn lane is these
+    # tests' dedicated home — carrying `property` too would run the same
+    # 200 examples again in the nightly test-property lane.
+    @pytest.mark.slow
+    @settings(max_examples=200, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20),
+           st.lists(_op, min_size=4, max_size=28))
+    def test_churn_conformance_fuzzed(seed, ops):
+        _conformance(seed, ops, (seed, len(ops)))
+
+    @pytest.mark.slow
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20))
+    def test_churn_determinism_fuzzed(seed):
+        """Same seed ⇒ identical final state AND identical wire totals."""
+        ops = _random_ops(seed, 30)
+        c1, d1 = _run_schedule(seed, ops, packed=True)
+        c2, d2 = _run_schedule(seed, ops, packed=True)
+        assert c1.network.bytes_sent == c2.network.bytes_sent
+        assert c1.network.timers_fired == c2.network.timers_fired
+        assert (d1.ticks, d1.rounds, d1.wire_bytes()) == \
+            (d2.ticks, d2.rounds, d2.wire_bytes())
+        for k in KEYS:
+            for n in c1.nodes:
+                assert c1.nodes[n].versions(k) == c2.nodes[n].versions(k)
+except ImportError:     # pinned schedules above still run
+    pass

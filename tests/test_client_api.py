@@ -153,6 +153,84 @@ def test_coerce_rejects_garbage():
         CausalContext.from_bytes(b"not-a-token")
 
 
+def test_from_bytes_rejects_truncated_corrupt_and_empty():
+    """Satellite edge cases: a malformed token must fail with a clean
+    ``ValueError`` — never an IndexError/struct.error, never a context
+    carrying a *prefix* of the encoded entries."""
+    tok = CausalContext(entries=(("node-a", 7), ("node-b", 3),
+                                 ("node-c", 12)))
+    wire = tok.to_bytes()
+    assert CausalContext.from_bytes(wire) == tok
+    # empty and sub-magic inputs
+    for data in (b"", b"D", b"DCX", b"XXX1"):
+        with pytest.raises(ValueError):
+            CausalContext.from_bytes(data)
+    # truncation at EVERY byte boundary fails cleanly — no partial decode
+    for cut in range(len(wire)):
+        with pytest.raises(ValueError):
+            CausalContext.from_bytes(wire[:cut])
+    # trailing garbage is corruption, not silently ignored
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(wire + b"\x00")
+    # corrupt residue flag / unpicklable residue blob
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(wire[:4] + b"\x07" + wire[5:])
+    residueless_header = wire[:4] + b"\x01" + wire[5:]
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(residueless_header + b"\x80garbage")
+    # an entry id that is not UTF-8
+    bad = bytearray(wire)
+    bad[9:11] = b"\xff\xfe"                   # inside "node-a"
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(bytes(bad))
+    # trailing garbage after a residue blob (pickle STOPs early) is
+    # corruption too, and residue truncation fails cleanly
+    res_tok = CausalContext(entries=(("node-a", 1),), residue=("stamp",))
+    res_wire = res_tok.to_bytes()
+    assert CausalContext.from_bytes(res_wire) == res_tok
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(res_wire + b"\x00")
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(res_wire[:-1])
+
+
+def test_from_bytes_rejects_pickle_gadgets(tmp_path):
+    """Tokens travel through untrusted clients: a crafted residue blob
+    whose pickle would execute a callable must be *rejected*, not run."""
+    import os
+    import pickle
+    import struct
+
+    from repro.store.context import _MAGIC
+
+    marker = tmp_path / "pwned"
+
+    class Evil:
+        def __reduce__(self):
+            return (os.system, (f"touch {marker}",))
+
+    evil_wire = _MAGIC + struct.pack("<BH", 1, 0) + pickle.dumps((Evil(),))
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(evil_wire)
+    assert not marker.exists()               # the gadget never executed
+    # protocol-4 dotted STACK_GLOBAL through a repro module's own imports
+    # (repro.ckpt.shards does `import os`) must be rejected too — a
+    # namespace-prefix allowance would resolve `os.system` through it
+    def short_unicode(s):
+        b = s.encode()
+        return b"\x8c" + bytes([len(b)]) + b
+
+    dotted = (b"\x80\x04"                                 # PROTO 4
+              + short_unicode("repro.ckpt.shards")
+              + short_unicode("os.system")
+              + b"\x93"                                   # STACK_GLOBAL
+              + short_unicode(f"touch {marker}")
+              + b"\x85R.")                                # TUPLE1 REDUCE STOP
+    with pytest.raises(ValueError):
+        CausalContext.from_bytes(_MAGIC + struct.pack("<BH", 1, 0) + dotted)
+    assert not marker.exists()
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: packed GET performs zero object-clock decodes.
 # ---------------------------------------------------------------------------

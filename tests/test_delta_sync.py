@@ -22,7 +22,7 @@ from repro.core import batched as B
 from repro.kernels.dvv_ops import dvv_sync_mask_bucketed
 from repro.store import KVCluster, SimNetwork, Unavailable
 from repro.store.bulk import bulk_receive_antientropy, delta_antientropy
-from repro.store.packed import PackedVersionStore, key_bucket
+from repro.store.packed import PackedPayload, PackedVersionStore, key_bucket
 
 KEYS = tuple(f"k{i}" for i in range(6))
 
@@ -282,8 +282,10 @@ def test_digest_collision_probe():
     a = c.nodes["a"].backend.packed
     b = c.nodes["b"].backend.packed
     assert len(a.sync_digest().diff(b.sync_digest())) > 0
-    # poison b's digest tree to collide with a's
+    # poison b's digest tree AND value root to collide with a's (a real
+    # miss now requires both 64-bit structures to collide at once)
     b.digest = a.digest.copy()
+    b._value_root = a.value_root()
     assert not b.check_digests()                 # detectable locally
     st = c.delta_antientropy("a", "b")
     assert st.payload_slots == 0                 # the miss, documented
@@ -354,6 +356,72 @@ def test_bucket_shape_floors_and_pow2():
     assert B.bucket_shape(1, 1, 1) == (8, 2, 8)
     assert B.bucket_shape(9, 3, 9) == (16, 4, 16)
     assert B.bucket_shape(1024, 4, 128) == (1024, 4, 128)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the value-content digest gap (ROADMAP) is closed.
+# ---------------------------------------------------------------------------
+
+def test_value_content_gap_triggers_full_round_fallback():
+    """Regression for the ROADMAP §6.1 gap: clock-equal/value-different
+    versions — impossible under the protocol, reachable through arbitrary
+    non-protocol ``bulk_sync``/``bulk_receive_antientropy`` dicts — are
+    invisible to the clock+key digest tree.  The value root must route the
+    delta round to the full-payload fallback, never silently report
+    convergence."""
+    from repro.core.dvv import DVV
+    from repro.store import Version
+
+    c = KVCluster(("a", "b"), DVV_MECHANISM, network=SimNetwork(seed=2))
+    for i in range(12):
+        c.put(KEYS[i % 3], f"v{i}", via="a", coordinator="a")
+    c.deliver_replication()
+    c.antientropy_round()
+    # same clock, different values, one per side (a non-protocol injection)
+    clock = DVV((("rogue-writer", 0, 1),))
+    bulk_receive_antientropy(c.nodes["a"],
+                             {"rogue": frozenset({Version(clock, "X")})})
+    bulk_receive_antientropy(c.nodes["b"],
+                             {"rogue": frozenset({Version(clock, "Y")})})
+    a = c.nodes["a"].backend.packed
+    b = c.nodes["b"].backend.packed
+    assert len(a.sync_digest().diff(b.sync_digest())) == 0  # clocks collide
+    assert a.value_root() != b.value_root()                 # content differs
+    assert a.check_digests() and b.check_digests()          # roots are honest
+    st = c.delta_antientropy("a", "b")
+    assert st.fallback                                      # not a silent skip
+    assert st.payload_slots > 0 and st.payload_bytes > 0
+    assert st.buckets_divergent == 0                        # the gap, documented
+    # the fallback cannot reconcile equal-clock values (resident copy wins);
+    # the rounds keep flagging the divergence rather than masking it
+    st2 = c.delta_antientropy("a", "b")
+    assert st2.fallback
+    assert c.nodes["b"].versions("rogue") != c.nodes["a"].versions("rogue")
+
+
+def test_value_root_tracks_protocol_mutation():
+    """Protocol stores never trip the value check: twin stores with equal
+    content agree on the root through kills, compaction and growth."""
+    s = _loaded_store(120, seed=5)
+    t = PackedVersionStore(n_buckets=s.n_buckets)
+    t.apply_payload(s.payload())
+    assert s.value_root() == t.value_root()
+    vv = np.full(s.n_replicas, 9, np.int32)
+    for store in (s, t):
+        store.sync_key("key3", vv[None, :], np.asarray([1], np.int32),
+                       np.asarray([10], np.int32), ["overwrite"])
+    s.compact(force=True)
+    assert s.value_root() == t.value_root()
+    assert s.check_digests() and t.check_digests()
+    # same clocks, different value ⇒ roots split
+    u = PackedVersionStore(n_buckets=s.n_buckets)
+    p = s.payload()
+    u.apply_payload(PackedPayload(
+        p.replica_ids, p.keys, p.vv, p.dot_id, p.dot_n, p.key_ix,
+        tuple("DIFFERENT" if i == 0 else v
+              for i, v in enumerate(p.values)), wall=p.wall))
+    assert len(s.sync_digest().diff(u.sync_digest())) == 0
+    assert s.value_root() != u.value_root()
 
 
 # ---------------------------------------------------------------------------
