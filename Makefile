@@ -3,19 +3,22 @@
 # `make test-all` runs everything including the slow phases;
 # `make test-property` runs only the hypothesis property suites (their
 # dedicated lane); `make test-churn` runs the membership/fault-injection
-# conformance suite (pinned fast schedules + the slow hypothesis phase).
+# conformance suite (pinned fast schedules + the slow hypothesis phase);
+# `make test-read` runs the batched read-plane + read-repair suite
+# (including its slow kernel/fuzz phases).
 # `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
-# looped client calls and writes BENCH_client_api.json; `lint` is a
-# dependency-free syntax/bytecode pass (the container has no flake8/ruff
-# baked in).
+# looped client calls and writes BENCH_client_api.json; `bench-read`
+# sweeps the one-sweep read plane (keys x divergence, repair on/off) and
+# writes BENCH_read_path.json; `lint` is a dependency-free syntax/bytecode
+# pass (the container has no flake8/ruff baked in).
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-property test-churn bench-smoke bench \
-	bench-delta bench-client bench-churn lint check
+.PHONY: test test-all test-property test-churn test-read bench-smoke \
+	bench bench-delta bench-client bench-churn bench-read lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -29,6 +32,9 @@ test-property:
 test-churn:
 	$(PY) -m pytest -q -m churn
 
+test-read:
+	$(PY) -m pytest -q -m read
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
@@ -37,6 +43,9 @@ bench-smoke:
 	          json_path=None, reps=1)))"
 	$(PY) -c "from benchmarks.client_bench import client_api_rows; \
 	          print('\n'.join(client_api_rows((64,), json_path=None, reps=1)))"
+	$(PY) -c "from benchmarks.read_bench import read_path_rows; \
+	          print('\n'.join(read_path_rows((64,), (0.1,), \
+	          json_path=None, reps=1)))"
 
 bench:
 	$(PY) -m benchmarks.run
@@ -51,6 +60,9 @@ bench-client:
 bench-churn:
 	$(PY) -c "from benchmarks.churn_bench import churn_rows; \
 	          print('\n'.join(churn_rows()))"
+
+bench-read:
+	$(PY) -m benchmarks.read_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

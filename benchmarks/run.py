@@ -16,7 +16,7 @@ import sys
 
 def main() -> None:
     from . import churn_bench, client_bench, delta_bench, kernel_bench, \
-        paper_figures, scalability
+        paper_figures, read_bench, scalability
 
     rows = []
     rows += paper_figures.rows()
@@ -25,6 +25,7 @@ def main() -> None:
     rows += delta_bench.rows()
     rows += client_bench.rows()
     rows += churn_bench.rows()
+    rows += read_bench.rows()
 
     print("name,us_per_call,derived")
     for r in rows:

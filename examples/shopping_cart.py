@@ -97,7 +97,13 @@ store.deliver_replication()
 print(f"checkout wrote {len(acks)} keys via "
       f"{sorted({a.coordinator for a in acks.values()})}")
 
-batch = laptop.get_many(list(order_keys), quorum=2)
+# the multi-key fetch takes the batched read plane: keys grouped by their
+# read-quorum set, ONE stacked quorum-merge sweep per group (instead of a
+# per-key merge), per-key results sliced out — and with repair=True any
+# replica the merge finds stale is healed by one consolidated push
+# (Dynamo-style read-repair: hot keys converge at read latency)
+batch = laptop.get_many(list(order_keys), quorum=2, repair=True)
+store.deliver_replication()                 # flush the repair pushes
 assert batch["cart/alice"].values == (cart_encode(set()),)
 assert batch["order/1042"].siblings == 1
 print(f"cart is empty, order persisted: {batch['order/1042'].values[0]}")

@@ -142,6 +142,33 @@ def grouped_ceil_at_np(vv_at_r: np.ndarray, dot_ids: np.ndarray,
     return out
 
 
+def grouped_ceiling_np(vvs: np.ndarray, dot_ids: np.ndarray,
+                       dot_ns: np.ndarray, groups: np.ndarray,
+                       n_groups: int) -> np.ndarray:
+    """Per-*group* §5.4 ceiling ⌈S⌉ over stacked clock rows — the
+    segment-reduced twin of ``store.packed.ceiling_from_rows`` used by the
+    batched read plane (``quorum_merge_many``).
+
+    ``vvs`` is int32[M, R]; ``groups`` assigns each row to one of
+    ``n_groups`` keys.  Returns int64[n_groups, R]: per group, the column
+    max of the rows with the dots folded in — two ``np.maximum.at``
+    scatters, no per-key Python loop.
+    """
+    R = int(vvs.shape[-1])
+    out = np.zeros((n_groups, R), np.int64)
+    if vvs.shape[0] == 0 or R == 0:
+        return out
+    g = np.asarray(groups, np.int64)
+    np.maximum.at(out, g, np.asarray(vvs, np.int64))
+    has_dot = np.asarray(dot_ids) != NO_DOT
+    if has_dot.any():
+        flat = out.reshape(-1)               # view: scatters land in ``out``
+        np.maximum.at(flat, g[has_dot] * R
+                      + np.asarray(dot_ids, np.int64)[has_dot],
+                      np.asarray(dot_ns, np.int64)[has_dot])
+    return out
+
+
 def effective_ceil_np(vvs: np.ndarray, dot_ids: np.ndarray,
                       dot_ns: np.ndarray, r_index: int) -> int:
     """⌈S⌉_r over a clock set given as arrays: max of vv[:, r] and any dot at r."""

@@ -1,7 +1,9 @@
 from .ops import (
     antientropy_obsolete, dvv_concurrent, dvv_dominates, dvv_leq,
-    dvv_sync_mask, dvv_sync_mask_bucketed,
+    dvv_read_sweep, dvv_read_sweep_bucketed, dvv_sync_mask,
+    dvv_sync_mask_bucketed,
 )
 
 __all__ = ["dvv_leq", "dvv_dominates", "dvv_concurrent",
-           "antientropy_obsolete", "dvv_sync_mask", "dvv_sync_mask_bucketed"]
+           "antientropy_obsolete", "dvv_sync_mask", "dvv_sync_mask_bucketed",
+           "dvv_read_sweep", "dvv_read_sweep_bucketed"]

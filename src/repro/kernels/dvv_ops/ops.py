@@ -8,7 +8,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ...core.batched import BucketedSyncMask
+import numpy as np
+
+from ...core.batched import BucketedSyncMask, bucket_shape, merge_context, \
+    pad_sync_args
 from .dvv_ops import dvv_leq_pallas, dvv_sync_mask_pallas
 
 
@@ -39,6 +42,67 @@ def dvv_sync_mask(vvs, dot_ids, dot_ns, valid):
 #: provably inert (tests/test_delta_sync.py).  ``jit=False``: the pallas
 #: wrapper is already jitted; bucketing is what makes its cache hit.
 dvv_sync_mask_bucketed = BucketedSyncMask(dvv_sync_mask, jit=False)
+
+
+def dvv_read_sweep(vvs, dot_ids, dot_ns, valid):
+    """Fused quorum-read sweep: survival + per-key §5.4 ceiling, one pass.
+
+    The read plane's device-side primitive: the fused Pallas survival
+    kernel produces the mask, and the ceiling ⌈S⌉ of each key's *surviving*
+    rows falls out of the same resident tensor via ``merge_context`` (a
+    masked column max with the dots folded in) — no second gather of the
+    clock rows.  Returns ``(mask bool[N, K], ceil int32[N, R])``; semantics
+    equal ``core.batched.sync_mask_np`` + ``grouped_ceiling_np`` over the
+    surviving rows (conformance-tested in tests/test_read_path.py).
+    Production reads enter through ``dvv_read_sweep_bucketed`` below.
+    """
+    vvs = jnp.asarray(vvs)
+    dot_ids = jnp.asarray(dot_ids)
+    dot_ns = jnp.asarray(dot_ns)
+    mask = dvv_sync_mask_pallas(vvs, dot_ids, dot_ns, jnp.asarray(valid),
+                                interpret=_interpret())
+    return mask, merge_context(vvs, dot_ids, dot_ns, mask)
+
+
+class BucketedReadSweep:
+    """Shape-bucketed front end over ``dvv_read_sweep`` — the §6.4 cache
+    trick applied to the read plane.  Quorum merges arrive as arbitrary
+    small ``[N, K, R]`` tensors; padding to the power-of-two bucket keeps
+    the pallas survival kernel's compilation cache warm across all of
+    them.  Pad rows are invalid (inert for both mask and ceiling — an
+    invalid row contributes nothing to ``merge_context``) and pad replica
+    columns come back as zero ceilings, sliced off on return.  This is
+    the ``sweep_fn`` that ``KVCluster.get_many(use_kernel=True)`` hands
+    ``quorum_merge_many``."""
+
+    def __init__(self):
+        self._seen: set = set()
+        self.hits = 0
+        self.misses = 0
+
+    def __call__(self, vvs, dot_ids, dot_ns, valid):
+        vvs = np.asarray(vvs)
+        dot_ids = np.asarray(dot_ids)
+        dot_ns = np.asarray(dot_ns)
+        valid = np.asarray(valid)
+        N, K, R = vvs.shape
+        if N == 0 or K == 0:
+            return np.zeros((N, K), bool), np.zeros((N, R), np.int64)
+        key = bucket_shape(N, K, R)
+        if key in self._seen:
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._seen.add(key)
+        args = pad_sync_args(vvs, dot_ids, dot_ns, valid, key)
+        mask, ceil = dvv_read_sweep(*args)
+        return (np.asarray(mask)[:N, :K],
+                np.asarray(ceil)[:N, :R].astype(np.int64))
+
+
+#: Module-level instance (one shared bucket cache, like
+#: ``dvv_sync_mask_bucketed``).
+dvv_read_sweep_bucketed = BucketedReadSweep()
 
 
 def dvv_dominates(vx, ix, nx, vy, iy, ny):

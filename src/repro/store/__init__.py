@@ -5,7 +5,8 @@ from .cluster import GetResult, KVCluster, PutAck
 from .context import CausalContext, EMPTY_CONTEXT
 from .gossip import GossipDriver, cluster_converged
 from .network import SimNetwork, Unavailable
-from .packed import PackedPayload, PackedVersionStore, StoreDigest, key_bucket
+from .packed import MergedRead, PackedPayload, PackedVersionStore, \
+    StoreDigest, key_bucket, quorum_merge_many
 from .replica import ReplicaNode
 from .version import Version, clocks_of, sync_versions, values_of
 
@@ -15,6 +16,7 @@ __all__ = [
     "SimNetwork", "Unavailable",
     "GossipDriver", "cluster_converged",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
-    "PackedVersionStore", "PackedPayload",
+    "PackedVersionStore", "PackedPayload", "MergedRead",
+    "quorum_merge_many",
     "StoreDigest", "DeltaSyncStats", "delta_antientropy", "key_bucket",
 ]

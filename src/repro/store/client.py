@@ -7,8 +7,13 @@ per-client version-vector baselines; DVV ignores it), and session defaults
 (proxy node, quorums) — and adds the batched multi-key operations the
 single-key API cannot express efficiently:
 
-* ``get_many(keys)``     — one proxy round over many keys; on the packed
-  backend every key takes the zero-decode array read path.
+* ``get_many(keys)``     — one proxy round over many keys; packed quorums
+  run as grouped one-sweep quorum merges (``quorum_merge_many``: one
+  union-universe remap per quorum set, one stacked ``sync_mask`` sweep,
+  one grouped §5.4 ceiling reduce), zero object-clock decodes.  With
+  ``repair`` (per call, or ``read_repair=True`` as a session default)
+  stale quorum members are healed by one consolidated read-repair push
+  each — Dynamo-style convergence on the read path.
 * ``put_many({k: (v, ctx)})`` — writes grouped by coordinator; each group
   executes as ONE vectorized store update (``PackedVersionStore.
   update_keys``: one grouped encode → one ``sync_mask`` sweep → one
@@ -33,13 +38,15 @@ class KVClient:
                  via: Optional[str] = None,
                  read_quorum: Optional[int] = None,
                  write_quorum: Optional[int] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 read_repair: bool = False):
         self.cluster = cluster
         self.client_id = client_id
         self.via = via
         self.read_quorum = read_quorum
         self.write_quorum = write_quorum
         self.use_kernel = use_kernel
+        self.read_repair = read_repair   # session default for get_many
         self.counter = 0                 # session-monotone update counter
 
     # -- single-key ---------------------------------------------------------
@@ -63,9 +70,14 @@ class KVClient:
     # -- batched ------------------------------------------------------------
 
     def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
-                 quorum: Optional[int] = None) -> Dict[str, GetResult]:
-        return self.cluster.get_many(keys, via=via or self.via,
-                                     quorum=quorum or self.read_quorum)
+                 quorum: Optional[int] = None,
+                 repair: Optional[bool] = None) -> Dict[str, GetResult]:
+        """Batched GET over the one-sweep read plane; ``repair`` overrides
+        the session's ``read_repair`` default for this call."""
+        return self.cluster.get_many(
+            keys, via=via or self.via, quorum=quorum or self.read_quorum,
+            repair=self.read_repair if repair is None else repair,
+            use_kernel=self.use_kernel)
 
     def put_many(self, items: Mapping[str, Tuple[Any, Any]], *,
                  via: Optional[str] = None,

@@ -19,15 +19,19 @@ from __future__ import annotations
 import hashlib
 import random
 from dataclasses import dataclass
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, List, Mapping, Optional, Sequence, \
+    Tuple
+
+import numpy as np
 
 from ..core.kernel import Mechanism
 from .bulk import DeltaSyncStats, delta_antientropy as _delta_antientropy
 from .context import CausalContext
 from .network import SimNetwork, Unavailable
-from .packed import quorum_merge_key
+from .packed import MergedRead, NO_DOT, PackedPayload, quorum_merge_key, \
+    quorum_merge_many, remap_rows
 from .replica import ReplicaNode
-from .version import Version, clocks_of, resolution_key, sync_versions
+from .version import Version, clocks_of, sync_versions
 
 #: Default per-push range budget when gossip fanout sampling is active
 #: (`delta_antientropy_round(fanout=...)`); caps a single round's payload
@@ -65,6 +69,73 @@ class PutAck:
     clock: Any
     coordinator: str
     replicated_to: Tuple[str, ...]
+
+
+def _merged_result(values: Sequence[Any], walls: Sequence[float],
+                   ckeys: Sequence[str],
+                   entries: Tuple[Tuple[str, int], ...]) -> GetResult:
+    """``GetResult`` from merged packed survivor rows.  Each value's repr
+    is computed once and shared by the sort key and the resolution tuple
+    (it used to be computed twice per sibling on the hot read path)."""
+    reprs = [repr(v) for v in values]
+    order = sorted(range(len(values)),
+                   key=lambda i: (reprs[i], walls[i], ckeys[i]))
+    return GetResult(
+        values=tuple(values[i] for i in order),
+        context=CausalContext(entries=entries),
+        siblings=len(values),
+        resolution=tuple((walls[i], ckeys[i], reprs[i]) for i in order))
+
+
+def _object_result(acc: FrozenSet[Version]) -> GetResult:
+    """``GetResult`` from an object-backend merged version set (same
+    repr-once discipline as the packed twin)."""
+    keyed = [(v, repr(v.clock), repr(v.value)) for v in acc]
+    keyed.sort(key=lambda t: (t[2], t[0].wall, t[1]))
+    return GetResult(
+        values=tuple(t[0].value for t in keyed),
+        context=CausalContext.from_clocks(clocks_of(acc)),
+        siblings=len(acc),
+        resolution=tuple((t[0].wall, t[1], t[2]) for t in keyed))
+
+
+def _repair_payload(items: Sequence[Tuple[str, MergedRead]]) -> PackedPayload:
+    """One consolidated read-repair push for one destination: the merged
+    surviving rows of every key the member is stale on, re-encoded as a
+    single ``PackedPayload`` — the same wire shape ``antientropy_payload``
+    slices produce, so receivers apply it through the ordinary
+    ``("store", payload)`` path and ``SimNetwork.bytes_sent`` prices it
+    like any other anti-entropy transfer."""
+    ids: List[str] = []
+    index: Dict[str, int] = {}
+    for _, m in items:
+        for rid in m.replica_ids:
+            if rid not in index:
+                index[rid] = len(ids)
+                ids.append(rid)
+    Ru = len(ids)
+    M = sum(len(m.values) for _, m in items)
+    vv = np.zeros((M, Ru), np.int32)
+    did = np.full(M, NO_DOT, np.int32)
+    dn = np.zeros(M, np.int32)
+    wall = np.zeros(M, np.float64)
+    kix = np.zeros(M, np.int32)
+    values: List[Any] = []
+    off = 0
+    for out_ix, (_, m) in enumerate(items):
+        n = len(m.values)
+        cols = np.asarray([index[r] for r in m.replica_ids], np.int64)
+        vv[off: off + n], did[off: off + n] = \
+            remap_rows(m.vv, m.dot_id, cols, Ru)
+        dn[off: off + n] = m.dot_n
+        wall[off: off + n] = m.walls
+        kix[off: off + n] = out_ix
+        values.extend(m.values)
+        off += n
+    return PackedPayload(
+        replica_ids=tuple(ids), keys=tuple(k for k, _ in items),
+        vv=vv, dot_id=did, dot_n=dn, key_ix=kix,
+        values=tuple(values), wall=wall)
 
 
 class KVCluster:
@@ -223,6 +294,16 @@ class KVCluster:
         return candidates[0]
 
     # -- client operations -------------------------------------------------------
+    def _object_read(self, key: str, chosen: Sequence[ReplicaNode]
+                     ) -> FrozenSet[Version]:
+        """Object-backend quorum merge for one key (the generic path)."""
+        acc: FrozenSet[Version] = frozenset()
+        for node in chosen:
+            acc = sync_versions(
+                acc, node.versions(key),
+                total_order=not self.mechanism.tracks_concurrency)
+        return acc
+
     def get(self, key: str, *, via: Optional[str] = None,
             quorum: Optional[int] = None) -> GetResult:
         proxy = via or next(iter(self.nodes))
@@ -239,32 +320,98 @@ class KVCluster:
             # straight from the int32 columns — zero object-clock decodes.
             values, walls, ckeys, entries = quorum_merge_key(
                 [n.backend.packed for n in chosen], key)
-            order = sorted(range(len(values)),
-                           key=lambda i: (repr(values[i]), walls[i],
-                                          ckeys[i]))
-            return GetResult(
-                values=tuple(values[i] for i in order),
-                context=CausalContext(entries=entries),
-                siblings=len(values),
-                resolution=tuple((walls[i], ckeys[i], repr(values[i]))
-                                 for i in order))
-        acc = frozenset()
-        for node in chosen:
-            acc = sync_versions(acc, node.versions(key),
-                                total_order=not self.mechanism.tracks_concurrency)
-        ordered = sorted(acc, key=lambda v: (repr(v.value), v.wall,
-                                             repr(v.clock)))
-        return GetResult(
-            values=tuple(v.value for v in ordered),
-            context=CausalContext.from_clocks(clocks_of(acc)),
-            siblings=len(acc),
-            resolution=tuple(resolution_key(v) for v in ordered))
+            return _merged_result(values, walls, ckeys, entries)
+        return _object_result(self._object_read(key, chosen))
 
     def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
-                 quorum: Optional[int] = None) -> Dict[str, GetResult]:
-        """Multi-key GET through one proxy; each key takes the same quorum
-        path as ``get`` (packed backends: zero object-clock decodes)."""
-        return {k: self.get(k, via=via, quorum=quorum) for k in keys}
+                 quorum: Optional[int] = None, repair: bool = False,
+                 use_kernel: bool = False) -> Dict[str, GetResult]:
+        """Multi-key GET through one proxy — the batched read plane.
+
+        Admission mirrors ``put_many``: proxy reachability and the read
+        quorum are resolved for *every* key up front, and ``Unavailable``
+        is raised before any store is touched — a failing key never
+        discards already-merged results.  Keys whose whole quorum is
+        packed then run as grouped quorum merges (``quorum_merge_many``):
+        one union-universe remap per quorum set, one stacked ``[N, K, R]``
+        survival sweep (``use_kernel=True`` routes it through the fused
+        §6.4 shape-bucketed read sweep, survival + ceilings in one
+        device pass), one grouped §5.4 ceiling reduce.  Mixed/object
+        quorums fall back to the per-key merge.
+
+        ``repair=True`` closes the Dynamo read-repair loop: any quorum
+        member whose live rows for a key differ from the merged survivors
+        receives ONE consolidated ``("store", payload)`` push covering all
+        of its stale keys (sent from the proxy, priced by
+        ``SimNetwork.bytes_sent`` like any anti-entropy transfer; a stale
+        *proxy* applies its payload locally instead of mailing itself),
+        so hot keys converge on the read path instead of waiting for
+        gossip.  A converged quorum generates zero repair traffic.
+        """
+        proxy = via or next(iter(self.nodes))
+        if proxy in self.network.down:
+            raise Unavailable(f"proxy {proxy} is down")
+        quorum = quorum or self.read_quorum
+        # -- admission: resolve every key's quorum before touching stores
+        chosen: Dict[str, List[str]] = {}
+        short: List[str] = []
+        for key in keys:
+            reachable = self._reachable_replicas(proxy, key)
+            if len(reachable) < quorum:
+                short.append(key)
+            else:
+                chosen[key] = reachable[: max(quorum, 1)]
+        if short:
+            raise Unavailable(
+                f"read quorum {quorum} unreachable for {len(short)}/"
+                f"{len(chosen) + len(short)} keys via {proxy} "
+                f"(e.g. {short[:3]})")
+        results: Dict[str, GetResult] = {}
+        packed_repairs: Dict[str, List[Tuple[str, MergedRead]]] = {}
+        object_repairs: Dict[str, Dict[str, FrozenSet[Version]]] = {}
+        packed_keys = [k for k, ids in chosen.items()
+                       if all(self.nodes[r].is_packed for r in ids)]
+        if packed_keys:
+            sweep_fn = None
+            if use_kernel:
+                from ..kernels.dvv_ops import dvv_read_sweep_bucketed
+                sweep_fn = dvv_read_sweep_bucketed
+            merged = quorum_merge_many(
+                {k: [self.nodes[r].backend.packed for r in chosen[k]]
+                 for k in packed_keys},
+                packed_keys, sweep_fn=sweep_fn, track_stale=repair)
+            for k, m in merged.items():
+                results[k] = _merged_result(m.values, m.walls, m.clock_keys,
+                                            m.entries)
+                if repair:
+                    for j in m.stale:
+                        packed_repairs.setdefault(
+                            chosen[k][j], []).append((k, m))
+        for k, ids in chosen.items():
+            if k in results:
+                continue
+            acc = self._object_read(k, [self.nodes[r] for r in ids])
+            results[k] = _object_result(acc)
+            if repair:
+                for r in ids:
+                    if self.nodes[r].versions(k) != acc:
+                        object_repairs.setdefault(r, {})[k] = acc
+        if repair:
+            # A stale proxy repairs itself locally (it IS this process —
+            # no self-addressed wire message, no phantom bytes_sent); every
+            # other stale member gets its one consolidated push.
+            for dst, items in packed_repairs.items():
+                payload = _repair_payload(items)
+                if dst == proxy:
+                    self.nodes[dst].receive_antientropy(payload)
+                else:
+                    self.network.send(proxy, dst, ("store", payload))
+            for dst, payload in object_repairs.items():
+                if dst == proxy:
+                    self.nodes[dst].receive_antientropy(payload)
+                else:
+                    self.network.send(proxy, dst, ("store", payload))
+        return {k: results[k] for k in chosen}
 
     def put(self, key: str, value: Any, context: Any = None,
             *, via: Optional[str] = None, client_id: str = "?",

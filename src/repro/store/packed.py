@@ -41,7 +41,8 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Dict, FrozenSet, Iterable, List, Mapping, Optional, \
+    Sequence, Tuple
 
 import numpy as np
 
@@ -94,16 +95,28 @@ def ceiling_from_rows(vv: np.ndarray, dot_id: np.ndarray, dot_n: np.ndarray
                       ) -> np.ndarray:
     """Per-replica ceiling ⌈S⌉ over packed clock rows: column max with the
     dots folded in.  The one §5.4 compaction shared by GET-context
-    production (``context_of``, ``quorum_merge_key``)."""
-    R = vv.shape[-1]
-    if vv.shape[0] == 0:
-        return np.zeros(R, np.int64)
-    ceil = vv.max(axis=0).astype(np.int64)
-    has_dot = np.asarray(dot_id) != NO_DOT
-    if has_dot.any():
-        np.maximum.at(ceil, np.asarray(dot_id)[has_dot],
-                      np.asarray(dot_n)[has_dot].astype(np.int64))
-    return ceil
+    production (``context_of``, the quorum merge).  The single-group view
+    of ``core.batched.grouped_ceiling_np`` — the batched read plane calls
+    the grouped form directly, one segment reduce for all keys."""
+    return B.grouped_ceiling_np(vv, dot_id, dot_n,
+                                np.zeros(vv.shape[0], np.int64), 1)[0]
+
+
+def remap_rows(vv: np.ndarray, dot_id: np.ndarray, col_map: np.ndarray,
+               R: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Land packed clock rows in a target universe with one gather:
+    ``col_map[j]`` is the target column of source column ``j``.  Returns
+    ``(vv int32[M, R], dot_id int32[M])`` with absent dots (``NO_DOT``)
+    preserved.  The one remap shared by payload application, the quorum
+    merge and read-repair payload assembly."""
+    out = np.zeros((vv.shape[0], R), np.int32)
+    if len(col_map):
+        out[:, col_map] = vv
+    did = np.where(dot_id != NO_DOT,
+                   col_map[np.clip(dot_id, 0, None)] if len(col_map)
+                   else dot_id,
+                   NO_DOT).astype(np.int32)
+    return out, did
 
 
 def key_bucket(key: str, n_buckets: int = DIGEST_BUCKETS) -> int:
@@ -907,16 +920,8 @@ class PackedVersionStore:
         """Map payload columns into the local universe with one gather."""
         col_map = np.asarray(
             [self.intern_replica(r) for r in payload.replica_ids], np.int64)
-        R = self.n_replicas
-        M = len(payload)
-        vv = np.zeros((M, R), np.int32)
-        if len(col_map):
-            vv[:, col_map] = payload.vv
-        dot_id = np.where(payload.dot_id != NO_DOT,
-                          col_map[np.clip(payload.dot_id, 0, None)]
-                          if len(col_map) else payload.dot_id,
-                          NO_DOT).astype(np.int32)
-        return vv, dot_id
+        return remap_rows(payload.vv, payload.dot_id, col_map,
+                          self.n_replicas)
 
     def apply_payload(self, payload: PackedPayload, *,
                       mask_fn=None) -> int:
@@ -1085,81 +1090,229 @@ class PackedVersionStore:
 # Quorum GET merge — arrays across stores, zero object-clock decodes.
 # ---------------------------------------------------------------------------
 
-def _clock_sort_key(vv_row: np.ndarray, dot_col: int, dot_n: int,
-                    ids: Sequence[str]) -> str:
-    """A canonical string for one packed clock, equal by construction to
-    ``repr(B.decode(...))`` — the resolution tie-break of GetResult.value,
-    produced without building a DVV object."""
+def _clock_key(vv_row: Sequence[int], dot_col: int, dot_n: int,
+               sorted_cols: Sequence[Tuple[str, int]]) -> str:
+    """Canonical clock string from plain ints + a pre-sorted (rid, col)
+    table — the inner loop of the batched read plane (the table is built
+    once per quorum group, not once per row)."""
     parts = []
-    for rid, col in sorted((ids[c], c) for c in range(len(ids))):
-        m = int(vv_row[col])
-        n = int(dot_n) if col == dot_col else 0
+    for rid, col in sorted_cols:
+        m = vv_row[col]
+        n = dot_n if col == dot_col else 0
         if m or n:
             parts.append(f"({rid},{m})" if n == 0 else f"({rid},{m},{n})")
     return "{" + ", ".join(parts) + "}"
 
 
+def _clock_sort_key(vv_row: np.ndarray, dot_col: int, dot_n: int,
+                    ids: Sequence[str]) -> str:
+    """A canonical string for one packed clock, equal by construction to
+    ``repr(B.decode(...))`` — the resolution tie-break of GetResult.value,
+    produced without building a DVV object."""
+    return _clock_key([int(x) for x in vv_row], int(dot_col), int(dot_n),
+                      sorted((ids[c], c) for c in range(len(ids))))
+
+
+@dataclass
+class MergedRead:
+    """One key's merged quorum read, straight from the int32 columns.
+
+    ``values``/``walls``/``clock_keys`` are row-aligned with the surviving
+    clock rows ``vv``/``dot_id``/``dot_n`` (columns follow ``replica_ids``,
+    the union universe of the key's quorum group); ``entries`` is the §5.4
+    context ceiling of the survivors.  ``stale`` lists the indices — into
+    the key's store list as passed to ``quorum_merge_many`` — of quorum
+    members whose live row set for the key differs from the survivors
+    (row identity = clock + value content): they are missing a surviving
+    version, holding a dominated one, or carrying a divergent value under
+    an equal clock.  That is the read-repair signal
+    (``KVCluster.get_many(repair=True)``).
+    """
+
+    replica_ids: Tuple[str, ...]
+    vv: np.ndarray          # int32[S, Ru] surviving rows
+    dot_id: np.ndarray      # int32[S]
+    dot_n: np.ndarray       # int32[S]
+    values: List[Any]
+    walls: List[float]
+    clock_keys: List[str]
+    entries: Tuple[Tuple[str, int], ...]
+    stale: Tuple[int, ...] = ()
+
+
+def quorum_merge_many(stores_by_key: Mapping[str,
+                                             Sequence[PackedVersionStore]],
+                      keys: Sequence[str], *,
+                      mask_fn=None, sweep_fn=None,
+                      track_stale: bool = True) -> Dict[str, "MergedRead"]:
+    """Merge many keys' version sets across their read quorums in one sweep.
+
+    The whole §4 read path, batched: keys are grouped by quorum set (the
+    identity tuple of their contacted stores); per group, every store's
+    slots for *all* group keys are remapped into one union replica universe
+    with a single gather per store (the replica-id→union-column map is
+    built once per store, not rebuilt per key), all rows are stacked into
+    one grouped ``[N, K, R]`` tensor, survival is evaluated with a single
+    ``sync_mask`` sweep (``mask_fn`` routes it through the §6.4 shape
+    buckets — ``core.batched.BucketedSyncMask`` or ``kernels.dvv_ops.
+    dvv_sync_mask_bucketed``; ``None`` is the numpy reference), and the
+    per-key §5.4 ceilings come from one ``grouped_ceiling_np`` segment
+    reduce.  ``sweep_fn`` (wins over ``mask_fn``) fuses both steps on
+    device — a ``(vvs, dids, dns, valid) → (mask, ceil)`` callable like
+    ``kernels.dvv_ops.dvv_read_sweep_bucketed``, the path
+    ``use_kernel=True`` reads take.  No ``DVV`` object is created
+    anywhere.
+
+    Returns ``{key: MergedRead}`` — survivors plus the per-member staleness
+    signal read-repair consumes (``track_stale=False`` skips that
+    bookkeeping for pure reads).  Staleness is *content*-aware: row
+    identity includes the value repr, so the clock-equal/value-different
+    state (impossible under the protocol, reachable via non-protocol
+    ``bulk_sync`` feeds — the §6.1 value-root gap) is flagged rather than
+    silently reported converged, mirroring the delta round's fallback
+    stance; like that fallback, sync itself cannot reconcile equal-clock
+    values (the resident copy wins).  Byte-identical to the per-key
+    ``quorum_merge_key`` (which is now a one-key wrapper over this).
+    """
+    out: Dict[str, MergedRead] = {}
+    groups: Dict[Tuple[int, ...], List[str]] = {}
+    for k in keys:
+        groups.setdefault(
+            tuple(id(st) for st in stores_by_key[k]), []).append(k)
+    for gkeys in groups.values():
+        stores = list(stores_by_key[gkeys[0]])
+        N = len(gkeys)
+        # Union replica universe + per-store column maps, built ONCE per
+        # group — the per-key rebuild was the looped read path's tax.
+        ids: List[str] = []
+        index: Dict[str, int] = {}
+        col_maps: List[np.ndarray] = []
+        for st in stores:
+            cols = np.empty(st.n_replicas, np.int64)
+            for j, rid in enumerate(st.replica_ids):
+                ix = index.get(rid)
+                if ix is None:
+                    ix = index[rid] = len(ids)
+                    ids.append(rid)
+                cols[j] = ix
+            col_maps.append(cols)
+        Ru = len(ids)
+        # One gather per store: all of its rows for all group keys at once.
+        chunk_vv, chunk_did, chunk_dn, chunk_wall = [], [], [], []
+        chunk_group, chunk_src = [], []
+        values: List[Any] = []
+        for j, (st, cols) in enumerate(zip(stores, col_maps)):
+            lists = [st.key_slots(k) for k in gkeys]
+            rows = np.asarray([s for l in lists for s in l], np.int64)
+            if not len(rows):
+                continue
+            cv, cdid = remap_rows(st.vv[rows, : st.n_replicas],
+                                  st.dot_id[rows], cols, Ru)
+            chunk_vv.append(cv)
+            chunk_did.append(cdid)
+            chunk_dn.append(st.dot_n[rows])
+            chunk_wall.append(st.wall[rows])
+            chunk_group.append(
+                np.repeat(np.arange(N), [len(l) for l in lists]))
+            chunk_src.append(np.full(len(rows), j, np.int64))
+            values.extend(st.values[int(s)] for s in rows)
+        if not chunk_vv:                      # no store holds any group key
+            for key in gkeys:
+                out[key] = MergedRead(tuple(ids), np.zeros((0, Ru), np.int32),
+                                      np.zeros(0, np.int32),
+                                      np.zeros(0, np.int32), [], [], [], ())
+            continue
+        vv = np.concatenate(chunk_vv)
+        did = np.concatenate(chunk_did)
+        dn = np.concatenate(chunk_dn)
+        wall = np.concatenate(chunk_wall)
+        group = np.concatenate(chunk_group)
+        src = np.concatenate(chunk_src)
+        # Stable sort by key: within a key, rows stay store-major in slot
+        # order — the same duplicate tie-break as the per-key merge.
+        order = np.argsort(group, kind="stable")
+        vv, did, dn, wall = vv[order], did[order], dn[order], wall[order]
+        group, src = group[order], src[order]
+        values = [values[int(i)] for i in order]
+        M = len(group)
+        counts = np.bincount(group, minlength=N)
+        starts = np.zeros(N + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        pos = np.arange(M) - starts[group]
+        K = int(counts.max(initial=1))
+        vvs = np.zeros((N, K, Ru), np.int32)
+        dids = np.full((N, K), NO_DOT, np.int32)
+        dns = np.zeros((N, K), np.int32)
+        valid = np.zeros((N, K), bool)
+        vvs[group, pos] = vv
+        dids[group, pos] = did
+        dns[group, pos] = dn
+        valid[group, pos] = True
+        ceil = None
+        if sweep_fn is not None:              # fused survival + ceilings
+            mask, ceil = sweep_fn(vvs, dids, dns, valid)
+            mask, ceil = np.asarray(mask), np.asarray(ceil)
+        elif mask_fn is None:
+            mask = B.sync_mask_np(vvs, dids, dns, valid)
+        else:
+            mask = np.asarray(mask_fn(vvs, dids, dns, valid))
+        surv = mask[group, pos]
+        # One survivor gather for the whole group; per-key outputs are
+        # contiguous slices of it (rows are group-sorted already).
+        s_all = np.flatnonzero(surv)
+        vv_s, did_s, dn_s = vv[s_all], did[s_all], dn[s_all]
+        if ceil is None:
+            ceil = B.grouped_ceiling_np(vv_s, did_s, dn_s, group[s_all], N)
+        sb = np.zeros(N + 1, np.int64)
+        np.cumsum(np.bincount(group[s_all], minlength=N), out=sb[1:])
+        # plain-int views: the string/set building below is pure Python
+        s_list = s_all.tolist()
+        vv_l, did_l, dn_l = vv_s.tolist(), did_s.tolist(), dn_s.tolist()
+        wall_l = wall[s_all].tolist()
+        ceil_l = ceil.tolist()
+        sorted_cols = sorted((rid, c) for c, rid in enumerate(ids))
+        n_stores = len(stores)
+        ids_t = tuple(ids)
+        for g, key in enumerate(gkeys):
+            lo, hi = int(sb[g]), int(sb[g + 1])
+            stale: Tuple[int, ...] = ()
+            if track_stale:
+                surv_set = set()
+                member: List[set] = [set() for _ in range(n_stores)]
+                for i in range(int(starts[g]), int(starts[g + 1])):
+                    # row identity = clock AND value content: the
+                    # clock-equal/value-different state (§6.1 gap) must
+                    # flag as stale, never read as converged
+                    rk = (vv[i].tobytes(), int(did[i]), int(dn[i]),
+                          repr(values[i]))
+                    member[int(src[i])].add(rk)
+                    if surv[i]:
+                        surv_set.add(rk)
+                stale = tuple(j for j in range(n_stores)
+                              if member[j] != surv_set)
+            cg = ceil_l[g]
+            out[key] = MergedRead(
+                replica_ids=ids_t,
+                vv=vv_s[lo:hi],
+                dot_id=did_s[lo:hi],
+                dot_n=dn_s[lo:hi],
+                values=[values[i] for i in s_list[lo:hi]],
+                walls=wall_l[lo:hi],
+                clock_keys=[_clock_key(vv_l[i], did_l[i], dn_l[i],
+                                       sorted_cols) for i in range(lo, hi)],
+                entries=tuple(sorted(
+                    (ids_t[c], cg[c]) for c in range(Ru) if cg[c] > 0)),
+                stale=stale)
+    return out
+
+
 def quorum_merge_key(stores: Sequence[PackedVersionStore], key: str
                      ) -> Tuple[List[Any], List[float], List[str],
                                 Tuple[Tuple[str, int], ...]]:
-    """Merge one key's version sets across a read quorum of packed stores.
-
-    The whole §4 read path in arrays: remap every store's slots for ``key``
-    into a union replica universe (one gather per store), evaluate survival
-    with a single ``sync_mask`` sweep, and compute the §5.4 context ceiling
-    from the surviving rows.  Returns ``(values, walls, clock_keys,
-    ceiling_entries)`` for the survivors — no ``DVV`` object is created
-    anywhere (the acceptance criterion for packed GET).
-    """
-    ids: List[str] = []
-    index: Dict[str, int] = {}
-    chunks = []
-    for st in stores:
-        slots = st.key_slots(key)
-        if not slots:
-            continue
-        cols = []
-        for rid in st.replica_ids:
-            ix = index.get(rid)
-            if ix is None:
-                ix = len(ids)
-                ids.append(rid)
-                index[rid] = ix
-            cols.append(ix)
-        s = np.asarray(slots)
-        chunks.append((np.asarray(cols, np.int64), st.vv[s, : st.n_replicas],
-                       st.dot_id[s], st.dot_n[s],
-                       [st.values[int(i)] for i in slots], st.wall[s]))
-    if not chunks:
-        return [], [], [], ()
-    Ru = len(ids)
-    K = sum(c[1].shape[0] for c in chunks)
-    vv = np.zeros((K, Ru), np.int32)
-    did = np.full(K, NO_DOT, np.int32)
-    dn = np.zeros(K, np.int32)
-    walls = np.zeros(K, np.float64)
-    values: List[Any] = []
-    off = 0
-    for col_map, cvv, cdid, cdn, cvals, cwall in chunks:
-        n = cvv.shape[0]
-        if len(col_map):
-            vv[off: off + n][:, col_map] = cvv
-        did[off: off + n] = np.where(
-            cdid != NO_DOT,
-            col_map[np.clip(cdid, 0, None)] if len(col_map) else cdid,
-            NO_DOT).astype(np.int32)
-        dn[off: off + n] = cdn
-        walls[off: off + n] = cwall
-        values.extend(cvals)
-        off += n
-    mask = B.sync_mask_np(vv[None], did[None], dn[None],
-                          np.ones((1, K), bool))[0]
-    surv = np.flatnonzero(mask)
-    ceil = ceiling_from_rows(vv[surv], did[surv], dn[surv])
-    entries = tuple(sorted(
-        (ids[c], int(ceil[c])) for c in range(Ru) if ceil[c] > 0))
-    out_values = [values[int(i)] for i in surv]
-    out_walls = [float(walls[int(i)]) for i in surv]
-    out_keys = [_clock_sort_key(vv[int(i)], int(did[int(i)]),
-                                int(dn[int(i)]), ids) for i in surv]
-    return out_values, out_walls, out_keys, entries
+    """Merge one key's version sets across a read quorum of packed stores:
+    the single-key view of ``quorum_merge_many`` (one group, one key).
+    Returns ``(values, walls, clock_keys, ceiling_entries)`` for the
+    survivors — no ``DVV`` object is created anywhere (the acceptance
+    criterion for packed GET)."""
+    m = quorum_merge_many({key: tuple(stores)}, (key,))[key]
+    return m.values, m.walls, m.clock_keys, m.entries
