@@ -17,8 +17,9 @@
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all test-property test-churn test-read bench-smoke \
-	bench bench-delta bench-client bench-churn bench-read lint check
+.PHONY: test test-all test-property test-churn test-read test-shard \
+	bench-smoke bench bench-delta bench-client bench-churn bench-read \
+	bench-shard lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -34,6 +35,9 @@ test-churn:
 
 test-read:
 	$(PY) -m pytest -q -m read
+
+test-shard:
+	$(PY) -m pytest -q -m shard
 
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
@@ -63,6 +67,9 @@ bench-churn:
 
 bench-read:
 	$(PY) -m benchmarks.read_bench
+
+bench-shard:
+	$(PY) -m benchmarks.shard_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -6,8 +6,10 @@ from .context import CausalContext, EMPTY_CONTEXT
 from .gossip import GossipDriver, cluster_converged
 from .network import SimNetwork, Unavailable
 from .packed import MergedRead, PackedPayload, PackedVersionStore, \
-    StoreDigest, key_bucket, quorum_merge_many
+    StoreDigest, concat_payloads, key_bucket, quorum_merge_many, \
+    split_payload
 from .replica import ReplicaNode
+from .sharding import HashRing, key_hash64, shard_of_key
 from .version import Version, clocks_of, sync_versions, values_of
 
 __all__ = [
@@ -19,4 +21,6 @@ __all__ = [
     "PackedVersionStore", "PackedPayload", "MergedRead",
     "quorum_merge_many",
     "StoreDigest", "DeltaSyncStats", "delta_antientropy", "key_bucket",
+    "HashRing", "key_hash64", "shard_of_key",
+    "concat_payloads", "split_payload",
 ]

@@ -24,14 +24,20 @@ way in and once on the way out.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, FrozenSet, Optional, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Mapping, Optional, \
+    Tuple, Union
 
 import numpy as np
 
 from .packed import PackedPayload, PackedVersionStore, StoreDigest
 from .replica import PackedBackend, ReplicaNode, _as_object_payload
+from .sharding import shard_of_key
 from .version import Version
+
+#: A per-push range budget: one cap for every shard, or a per-shard map
+#: (the gossip driver's independently-adapted hot-shard budgets).
+RangeBudget = Union[None, int, Mapping[int, Optional[int]]]
 
 
 def _mask_fn(use_kernel: bool):
@@ -60,6 +66,11 @@ class DeltaSyncStats:
     digest_bytes: int         # phase-1 wire size (both directions)
     changed: int              # keys whose version set changed at the receiver
     fallback: bool = False    # True when the full-payload round ran instead
+    shard: int = -1           # which shard this round covered (-1: unsharded
+                              # or an aggregate over shards)
+    # Sharded rounds: the per-shard constituent stats (aggregates sum the
+    # numeric fields above).  Empty for unsharded/per-shard entries.
+    per_shard: Tuple["DeltaSyncStats", ...] = field(default=())
 
 
 def rank_ranges(src_store: PackedVersionStore, divergent: np.ndarray,
@@ -109,29 +120,11 @@ def _object_payload_nbytes(payload: Dict[str, FrozenSet[Version]]) -> int:
         for k, vs in payload.items())
 
 
-def delta_antientropy(src: ReplicaNode, dst: ReplicaNode, *,
-                      use_kernel: bool = False,
-                      max_ranges: Optional[int] = None) -> DeltaSyncStats:
-    """One two-phase delta round: ``src`` pushes its divergent ranges to
-    ``dst``.  Cost is proportional to divergence, not store size.
-
-    Falls back to the one-shot full-payload round when either side lacks a
-    packed store (object backends have no digest tree).
-    """
-    sb, db = src.backend, dst.backend
-    if not (isinstance(sb, PackedBackend) and isinstance(db, PackedBackend)):
-        payload = src.antientropy_payload()
-        if isinstance(payload, PackedPayload):
-            slots, nbytes = len(payload), payload.nbytes()
-        else:
-            slots = sum(len(vs) for vs in payload.values())
-            nbytes = _object_payload_nbytes(payload)
-        changed = bulk_receive_antientropy(dst, payload,
-                                           use_kernel=use_kernel)
-        return DeltaSyncStats(0, 0, 0, slots, nbytes, 0, changed,
-                              fallback=True)
-
-    src_store, dst_store = sb.packed, db.packed
+def _store_delta_round(src_store: PackedVersionStore,
+                       dst_store: PackedVersionStore, *,
+                       mask_fn=None, max_ranges: Optional[int] = None,
+                       shard: int = -1) -> DeltaSyncStats:
+    """The two-phase round between two packed stores (one shard's plane)."""
     dst_digest = dst_store.sync_digest()
     ranked, width, n_divergent = delta_plan(src_store, dst_digest,
                                             max_ranges=max_ranges)
@@ -146,17 +139,118 @@ def delta_antientropy(src: ReplicaNode, dst: ReplicaNode, *,
             # value roots disagree exactly then: run the full-payload
             # round rather than silently reporting convergence.
             payload = src_store.payload()
-            changed = db.receive_antientropy(payload,
-                                             mask_fn=_mask_fn(use_kernel))
+            changed = dst_store.apply_payload(payload, mask_fn=mask_fn)
             return DeltaSyncStats(width, 0, 0, len(payload),
                                   payload.nbytes(), digest_bytes, changed,
-                                  fallback=True)
-        return DeltaSyncStats(width, 0, 0, 0, 0, digest_bytes, 0)
+                                  fallback=True, shard=shard)
+        return DeltaSyncStats(width, 0, 0, 0, 0, digest_bytes, 0,
+                              shard=shard)
     payload = src_store.payload(key_ranges=ranked, ranges_width=width)
-    changed = db.receive_antientropy(payload, mask_fn=_mask_fn(use_kernel))
+    changed = dst_store.apply_payload(payload, mask_fn=mask_fn)
     return DeltaSyncStats(width, n_divergent, len(ranked),
                           len(payload), payload.nbytes(), digest_bytes,
-                          changed)
+                          changed, shard=shard)
+
+
+def _shard_budget(max_ranges: RangeBudget, shard: int) -> Optional[int]:
+    if isinstance(max_ranges, Mapping):
+        return max_ranges.get(shard)
+    return max_ranges
+
+
+def _aggregate_stats(per: List[DeltaSyncStats],
+                     probe_bytes: int = 0) -> DeltaSyncStats:
+    """Sum per-shard rounds into one stats record.  ``per_shard`` keeps
+    only the shards that actually ran a round (the budget-adaptation
+    signal); converged shards contribute ``probe_bytes`` of root-probe
+    wire and nothing else — no stats object each, so a converged sharded
+    heartbeat stays O(shards) int compares."""
+    return DeltaSyncStats(
+        buckets_total=sum(p.buckets_total for p in per),
+        buckets_divergent=sum(p.buckets_divergent for p in per),
+        buckets_sent=sum(p.buckets_sent for p in per),
+        payload_slots=sum(p.payload_slots for p in per),
+        payload_bytes=sum(p.payload_bytes for p in per),
+        digest_bytes=sum(p.digest_bytes for p in per) + probe_bytes,
+        changed=sum(p.changed for p in per),
+        fallback=any(p.fallback for p in per),
+        per_shard=tuple(per))
+
+
+def _node_keys(node: ReplicaNode) -> List[str]:
+    b = node.backend
+    if isinstance(b, PackedBackend):
+        return [k for st in b.stores for k in st.keys]
+    return list(b.store.keys())
+
+
+def delta_antientropy(src: ReplicaNode, dst: ReplicaNode, *,
+                      use_kernel: bool = False,
+                      max_ranges: RangeBudget = None,
+                      only_shards: Optional[Iterable[int]] = None
+                      ) -> DeltaSyncStats:
+    """One two-phase delta round: ``src`` pushes its divergent ranges to
+    ``dst``.  Cost is proportional to divergence, not store size.
+
+    Sharded nodes run one round *per shard* — each shard's round opens
+    with a 16-byte root probe (8B digest root + 8B value root per
+    direction) so converged shards cost 32 wire bytes total instead of a
+    tree snapshot, and ``max_ranges`` may be a per-shard mapping so hot
+    shards get independent budgets.  ``only_shards`` restricts the round
+    to the given shards — the rebalance plane: bootstrap pulls only the
+    shards a joiner owns, handoff pushes only shards whose ownership
+    changed.  The returned stats aggregate the per-shard rounds
+    (``per_shard`` holds the constituents).
+
+    Falls back to the one-shot full-payload round when either side lacks a
+    packed store (object backends have no digest tree); ``only_shards``
+    then filters the payload's keys by shard so both backends move the
+    same key set.
+    """
+    sb, db = src.backend, dst.backend
+    if not (isinstance(sb, PackedBackend) and isinstance(db, PackedBackend)):
+        keys = None
+        if only_shards is not None:
+            want = frozenset(only_shards)
+            keys = [k for k in _node_keys(src)
+                    if shard_of_key(k, src.shards) in want]
+        payload = src.antientropy_payload(keys)
+        if isinstance(payload, PackedPayload):
+            slots, nbytes = len(payload), payload.nbytes()
+        else:
+            slots = sum(len(vs) for vs in payload.values())
+            nbytes = _object_payload_nbytes(payload)
+        changed = bulk_receive_antientropy(dst, payload,
+                                           use_kernel=use_kernel)
+        return DeltaSyncStats(0, 0, 0, slots, nbytes, 0, changed,
+                              fallback=True)
+
+    if sb.shards != db.shards:
+        raise ValueError(
+            f"shard counts differ: {sb.shards} (src) vs {db.shards} (dst)")
+    mask_fn = _mask_fn(use_kernel)
+    if sb.shards == 1:
+        # Unsharded: the exact pre-sharding protocol (no root probe — the
+        # tree diff's own root compare is the converged fast path).
+        return _store_delta_round(sb.stores[0], db.stores[0],
+                                  mask_fn=mask_fn,
+                                  max_ranges=_shard_budget(max_ranges, 0))
+    targets = range(sb.shards) if only_shards is None \
+        else sorted(frozenset(only_shards))
+    per: List[DeltaSyncStats] = []
+    probe_bytes = 0
+    src_stores, dst_stores = sb.stores, db.stores
+    for s in targets:
+        ss, ds = src_stores[s], dst_stores[s]
+        if ss.digest_root() == ds.digest_root() \
+                and ss.value_root() == ds.value_root():
+            # phase-0 skip: 8B digest root + 8B value root each direction
+            probe_bytes += 32
+            continue
+        per.append(_store_delta_round(
+            ss, ds, mask_fn=mask_fn,
+            max_ranges=_shard_budget(max_ranges, s), shard=s))
+    return _aggregate_stats(per, probe_bytes)
 
 
 def bulk_receive_antientropy(node: ReplicaNode,

@@ -16,21 +16,23 @@ so tests and the training runtime can inject them deterministically.
 """
 from __future__ import annotations
 
-import hashlib
 import random
 from dataclasses import dataclass
-from typing import Any, Dict, FrozenSet, List, Mapping, Optional, Sequence, \
-    Tuple
+from typing import Any, Dict, FrozenSet, Iterable, List, Mapping, Optional, \
+    Sequence, Tuple
 
 import numpy as np
 
 from ..core.kernel import Mechanism
-from .bulk import DeltaSyncStats, delta_antientropy as _delta_antientropy
+from .bulk import DeltaSyncStats, RangeBudget, \
+    delta_antientropy as _delta_antientropy
 from .context import CausalContext
 from .network import SimNetwork, Unavailable
 from .packed import MergedRead, NO_DOT, PackedPayload, quorum_merge_key, \
     quorum_merge_many, remap_rows
 from .replica import ReplicaNode
+from .sharding import DEFAULT_PLACEMENT_SLICES, DEFAULT_VNODES, HashRing, \
+    key_hash64, moved_shards, owned_shards, shard_of_key
 from .version import Version, clocks_of, sync_versions
 
 #: Default per-push range budget when gossip fanout sampling is active
@@ -146,17 +148,30 @@ class KVCluster:
                  read_quorum: int = 1, write_quorum: int = 1,
                  network: Optional[SimNetwork] = None, seed: int = 0,
                  packed: Optional[bool] = None,
-                 delta_range_budget: int = DELTA_RANGE_BUDGET):
+                 delta_range_budget: int = DELTA_RANGE_BUDGET,
+                 shards: int = 1, vnodes: int = DEFAULT_VNODES):
         if not node_ids:
             raise ValueError("need at least one node")
+        if shards < 1 or shards & (shards - 1):
+            raise ValueError(
+                f"shards must be a power of two >= 1, got {shards}")
         self.mechanism = mechanism
         # packed=None: array-resident clocks for DVV, objects otherwise
         # (ReplicaNode decides); packed=False forces the object backend —
         # the conformance reference for the packed store.  Remembered so
         # nodes added later (``add_node``) get the same backend.
         self._packed = packed
+        self.shards = shards
+        # Placement granularity: with sharded stores, placement shard ==
+        # store shard (rebalance is then exact at shard granularity); with
+        # shards=1 keys still place through the ring at a fixed number of
+        # hash-range slices, keeping the table O(1)-bounded either way.
+        self._slices = shards if shards > 1 else DEFAULT_PLACEMENT_SLICES
+        # hot-path constant: slice of a key = top bits of its 64-bit hash
+        self._slice_shift = 64 - (self._slices.bit_length() - 1)
         self.nodes: Dict[str, ReplicaNode] = {
-            n: ReplicaNode(n, mechanism, packed=packed) for n in node_ids}
+            n: ReplicaNode(n, mechanism, packed=packed, shards=shards)
+            for n in node_ids}
         self.replication = replication or len(node_ids)
         self.read_quorum = read_quorum
         self.write_quorum = write_quorum
@@ -164,7 +179,8 @@ class KVCluster:
         self.clock_time = 0.0
         self.delta_range_budget = delta_range_budget
         self.seed = seed
-        self._ring_cache: Dict[str, List[str]] = {}
+        self._ring = HashRing(node_ids, vnodes=vnodes)
+        self._rebuild_placement()
         # Seeded round-robin gossip schedule (delta_antientropy_round /
         # gossip_tick): each node's start offset is a pure function of
         # (seed, node id) — membership changes never reshuffle the schedule
@@ -179,19 +195,23 @@ class KVCluster:
                  use_kernel: bool = False) -> List[DeltaSyncStats]:
         """Join ``node_id`` to the cluster.
 
-        Key placement is rehashed (the ring cache is invalidated, so keys
-        whose top-``replication`` ring slice now includes the newcomer move
-        to it for future operations), and — unless ``bootstrap=False`` —
-        the new node catches up *warm* via ranked digest-diffed pulls from
-        every reachable peer (``bootstrap_node``), so it serves reads with
-        full causal state instead of empty version sets.  ``replication``
-        is a cluster parameter and does not change on join.
+        The newcomer's vnode tokens land on the ring and the placement
+        table is rebuilt — only the ~1/N of shards whose ring walk now
+        meets a new token change replica sets — and, unless
+        ``bootstrap=False``, the new node catches up *warm* via ranked
+        digest-diffed pulls from every reachable peer (``bootstrap_node``;
+        on a sharded cluster the pulls cover only the shards the newcomer
+        now owns), so it serves reads with full causal state instead of
+        empty version sets.  ``replication`` is a cluster parameter and
+        does not change on join.
         """
         if node_id in self.nodes:
             raise ValueError(f"node {node_id!r} already in cluster")
         self.nodes[node_id] = ReplicaNode(node_id, self.mechanism,
-                                          packed=self._packed)
-        self._ring_cache.clear()
+                                          packed=self._packed,
+                                          shards=self.shards)
+        self._ring.add(node_id)
+        self._rebuild_placement()
         # a join is a topology change too: listeners (the gossip driver)
         # adopt the newcomer immediately instead of on their next fire
         self.network._topology_changed()
@@ -200,31 +220,48 @@ class KVCluster:
                                        use_kernel=use_kernel)
         return []
 
-    def remove_node(self, node_id: str, *,
-                    handoff: bool = True) -> List[DeltaSyncStats]:
+    def remove_node(self, node_id: str, *, handoff: bool = True,
+                    handoff_ranges: Optional[int] = None
+                    ) -> List[DeltaSyncStats]:
         """Depart ``node_id``: drop its replica, rehash placement, purge
         messages addressed to it from the fabric.
 
         A *planned* departure first hands the node's state off — one final
         delta push to every reachable survivor — so writes for which it
         held the only copy (e.g. quorum-1 writes acked during a partition)
-        survive the decommission.  ``handoff=False`` models a crash-style
-        removal; an unreachable/down node naturally hands off nothing.
-        Surviving nodes' gossip schedules are untouched (offsets are
-        per-node functions of the seed), so removal never reshuffles peer
-        sampling determinism."""
+        survive the decommission.  On a sharded cluster the handoff is
+        placement-aware: only shards whose replica set changed travel, and
+        each survivor receives just the moved shards it now owns — bytes
+        moved scale with the departing node's ~K/N share, not the store.
+        ``handoff=False`` models a crash-style removal; an unreachable/
+        down node naturally hands off nothing.  Surviving nodes' gossip
+        schedules are untouched (offsets are per-node functions of the
+        seed), so removal never reshuffles peer sampling determinism."""
         if node_id not in self.nodes:
             raise KeyError(f"node {node_id!r} not in cluster")
         if len(self.nodes) == 1:
             raise ValueError("cannot remove the last node")
         stats: List[DeltaSyncStats] = []
+        before = self._placement
+        self._ring.remove(node_id)
+        self._rebuild_placement()
         if handoff:
+            moved = frozenset(moved_shards(before, self._placement)) \
+                if self.shards > 1 else None
             for peer in list(self.nodes):
-                if peer != node_id and \
-                        self.network.reachable(node_id, peer):
-                    stats.append(self.delta_antientropy(node_id, peer))
+                if peer == node_id or \
+                        not self.network.reachable(node_id, peer):
+                    continue
+                only: Optional[frozenset] = None
+                if moved is not None:
+                    only = moved & self._owned.get(peer, frozenset())
+                    if not only:
+                        continue
+                stats.append(self.delta_antientropy(
+                    node_id, peer, max_ranges=handoff_ranges,
+                    only_shards=only))
         del self.nodes[node_id]
-        self._ring_cache.clear()
+        self._owned.pop(node_id, None)
         self._node_gossip_step.pop(node_id, None)
         self.network.forget(node_id)
         return stats
@@ -241,7 +278,11 @@ class KVCluster:
         union), which is finite — so the loop terminates even when peers
         stay mutually divergent among themselves.  ``max_ranges`` bounds
         one pull so a joining node can rate-limit its catch-up; uncapped,
-        two passes suffice (the second proves quiescence)."""
+        two passes suffice (the second proves quiescence).  On a sharded
+        cluster the pulls are restricted to the shards ``node_id`` owns
+        under the current placement — the rebalance plane moves the
+        joiner's ~K/N share, not every peer's whole store."""
+        only = self._sync_shards(node_id)
         stats: List[DeltaSyncStats] = []
         for _ in range(max_passes):
             progress = False
@@ -251,7 +292,8 @@ class KVCluster:
                     continue
                 st = self.delta_antientropy(peer, node_id,
                                             use_kernel=use_kernel,
-                                            max_ranges=max_ranges)
+                                            max_ranges=max_ranges,
+                                            only_shards=only)
                 stats.append(st)
                 if st.changed:
                     progress = True
@@ -260,14 +302,31 @@ class KVCluster:
         return stats
 
     # -- placement (consistent-hash ring) -------------------------------------
-    def replicas_for(self, key: str) -> List[str]:
-        cached = self._ring_cache.get(key)
-        if cached is None:
-            ring = sorted(
-                self.nodes,
-                key=lambda n: hashlib.md5(f"{n}:{key}".encode()).hexdigest())
-            cached = self._ring_cache[key] = ring[: self.replication]
-        return cached
+    def _rebuild_placement(self) -> None:
+        """Recompute the O(slices) placement table from the ring — the only
+        placement state there is (bounded by the slice count, never by the
+        key universe; per-key lookup is then one hash + one index)."""
+        self._placement = self._ring.placement_table(
+            self._slices, self.replication)
+        self._owned: Dict[str, frozenset] = (
+            {n: owned_shards(self._placement, n) for n in self.nodes}
+            if self.shards > 1 else {})
+
+    def _sync_shards(self, node_id: str) -> Optional[frozenset]:
+        """The shard filter for rebalance transfers involving ``node_id``:
+        the shards it owns, or ``None`` (no filtering) when stores are
+        unsharded or replication spans every node (everyone owns every
+        shard, so filtering would be a no-op)."""
+        if self.shards <= 1 or self.replication >= len(self.nodes):
+            return None
+        return self._owned.get(node_id)
+
+    def replicas_for(self, key: str) -> Sequence[str]:
+        """The key's replica set: one stable 64-bit hash (blake2b-8), one
+        table index — O(1) per key, over a table the membership-change
+        path rebuilds in O(slices · log V).  Returns the table's own
+        (immutable) tuple — the hot path allocates nothing."""
+        return self._placement[key_hash64(key) >> self._slice_shift]
 
     def _reachable_replicas(self, via: str, key: str) -> List[str]:
         reachable = [r for r in self.replicas_for(key)
@@ -317,9 +376,10 @@ class KVCluster:
         chosen = [self.nodes[r] for r in reachable[:max(quorum, 1)]]
         if all(n.is_packed for n in chosen):
             # Array-native read path: quorum merge + §5.4 ceiling token
-            # straight from the int32 columns — zero object-clock decodes.
+            # straight from the int32 columns (the key's shard store) —
+            # zero object-clock decodes.
             values, walls, ckeys, entries = quorum_merge_key(
-                [n.backend.packed for n in chosen], key)
+                [n.store_for(key) for n in chosen], key)
             return _merged_result(values, walls, ckeys, entries)
         return _object_result(self._object_read(key, chosen))
 
@@ -352,11 +412,19 @@ class KVCluster:
         if proxy in self.network.down:
             raise Unavailable(f"proxy {proxy} is down")
         quorum = quorum or self.read_quorum
-        # -- admission: resolve every key's quorum before touching stores
+        # -- admission: resolve every key's quorum before touching stores.
+        # ONE atomic pass across all shards; keys sharing a placement slice
+        # share one reachability resolution (same replica set, same fabric
+        # state within the call).
         chosen: Dict[str, List[str]] = {}
         short: List[str] = []
+        slice_reach: Dict[int, List[str]] = {}
         for key in keys:
-            reachable = self._reachable_replicas(proxy, key)
+            sl = shard_of_key(key, self._slices)
+            reachable = slice_reach.get(sl)
+            if reachable is None:
+                reachable = slice_reach[sl] = \
+                    self._reachable_replicas(proxy, key)
             if len(reachable) < quorum:
                 short.append(key)
             else:
@@ -376,8 +444,11 @@ class KVCluster:
             if use_kernel:
                 from ..kernels.dvv_ops import dvv_read_sweep_bucketed
                 sweep_fn = dvv_read_sweep_bucketed
+            # Stores are per-(node, shard): quorum_merge_many's grouping by
+            # store-identity tuple therefore fans the sweep out per
+            # (shard, quorum-group) — each group one stacked tensor.
             merged = quorum_merge_many(
-                {k: [self.nodes[r].backend.packed for r in chosen[k]]
+                {k: [self.nodes[r].store_for(k) for r in chosen[k]]
                  for k in packed_keys},
                 packed_keys, sweep_fn=sweep_fn, track_stale=repair)
             for k, m in merged.items():
@@ -476,9 +547,16 @@ class KVCluster:
         ctxs: Dict[str, CausalContext] = {}
         walls: Dict[str, float] = {}
         coord_of: Dict[str, str] = {}
+        slice_coord: Dict[int, str] = {}
         for key, (value, context) in items.items():
             ctxs[key] = CausalContext.coerce(context)
-            coord = self._pick_coordinator(proxy, key)
+            # one admission resolution per placement slice (atomic across
+            # shards: any key without a reachable coordinator raises here,
+            # before any store is touched)
+            sl = shard_of_key(key, self._slices)
+            coord = slice_coord.get(sl)
+            if coord is None:
+                coord = slice_coord[sl] = self._pick_coordinator(proxy, key)
             coord_of[key] = coord
             groups.setdefault(coord, []).append(key)
         minted: Dict[str, Version] = {}
@@ -559,14 +637,20 @@ class KVCluster:
 
     def delta_antientropy(self, src: str, dst: str, *,
                           use_kernel: bool = False,
-                          max_ranges: Optional[int] = None) -> DeltaSyncStats:
+                          max_ranges: RangeBudget = None,
+                          only_shards: Optional[Iterable[int]] = None
+                          ) -> DeltaSyncStats:
         """Two-phase delta round (paper §4.1 anti-entropy, DESIGN.md §6):
-        digest exchange, then only the divergent key ranges travel."""
+        digest exchange, then only the divergent key ranges travel.  On a
+        sharded cluster the round runs per shard (root-probe fast path for
+        converged shards; ``max_ranges`` may map shard → budget);
+        ``only_shards`` restricts it — the rebalance plane."""
         if not self.network.reachable(src, dst):
             raise Unavailable(f"{src} -> {dst} unreachable")
         return _delta_antientropy(self.nodes[src], self.nodes[dst],
                                   use_kernel=use_kernel,
-                                  max_ranges=max_ranges)
+                                  max_ranges=max_ranges,
+                                  only_shards=only_shards)
 
     def _gossip_base(self, node: str) -> int:
         """A node's gossip start offset: a pure function of (seed, node id),
@@ -594,7 +678,7 @@ class KVCluster:
         return [peers[(off + j) % (n - 1)] for j in range(k)]
 
     def gossip_tick(self, node: str, *, step: Optional[int] = None,
-                    fanout: int = 1, max_ranges: Optional[int] = None,
+                    fanout: int = 1, max_ranges: RangeBudget = None,
                     use_kernel: bool = False
                     ) -> List[Tuple[str, DeltaSyncStats]]:
         """One node's bounded gossip pushes — the unit the continuous

@@ -56,6 +56,10 @@ class NodeGossip:
     fire_at: float = 0.0          # when that timer is due
     ticks: int = 0
     idle_ticks: int = 0           # consecutive all-converged ticks
+    # Sharded clusters: per-shard budget overrides for shards whose rounds
+    # saturated — a hot shard ramps alone, cold shards keep the base
+    # budget, and idle ticks decay entries back out of the map.
+    shard_ranges: Dict[int, int] = field(default_factory=dict)
 
 
 class GossipDriver:
@@ -223,9 +227,14 @@ class GossipDriver:
             self._arm(node, self.period)
             return
         rounds = []
+        budget = st.max_ranges
+        if st.shard_ranges and self.cluster.shards > 1:
+            # ramped shards carry their own budget; the rest ride the base
+            budget = {s: st.shard_ranges.get(s, st.max_ranges)
+                      for s in range(self.cluster.shards)}
         for peer, r in self.cluster.gossip_tick(
                 node, step=st.step, fanout=st.fanout,
-                max_ranges=st.max_ranges, use_kernel=self.use_kernel):
+                max_ranges=budget, use_kernel=self.use_kernel):
             rounds.append(r)
             if self.adapt and (r.buckets_divergent or r.changed):
                 self._wake(peer)     # it knows it differs too: drain fast
@@ -260,9 +269,24 @@ class GossipDriver:
         keep reporting ``fallback=True`` for observability."""
         divergent = any(r.buckets_divergent > 0 or r.changed > 0
                         for r in rounds)
-        saturated = any(r.buckets_sent >= st.max_ranges
-                        and r.buckets_divergent > r.buckets_sent
-                        for r in rounds)
+        # Saturation is judged where the budget was actually applied: a
+        # sharded round reports per-shard stats, and only the hot shard's
+        # budget ramps — its neighbours keep paying the base price.
+        saturated = False
+        for r in rounds:
+            if r.per_shard:
+                for p in r.per_shard:
+                    used = st.shard_ranges.get(p.shard, st.max_ranges)
+                    if p.buckets_sent >= used \
+                            and p.buckets_divergent > p.buckets_sent:
+                        if used < self.max_ranges_cap:
+                            st.shard_ranges[p.shard] = min(
+                                2 * used, self.max_ranges_cap)
+                        else:
+                            saturated = True   # at cap: widen fanout below
+            elif r.buckets_sent >= st.max_ranges \
+                    and r.buckets_divergent > r.buckets_sent:
+                saturated = True
         if divergent:
             self.divergent_ticks += 1
             st.idle_ticks = 0
@@ -278,6 +302,12 @@ class GossipDriver:
             st.interval = min(st.interval * self.backoff, self.max_period)
             # ramped budgets decay back toward the configured base
             st.max_ranges = max(self.base_ranges, st.max_ranges // 2)
+            for s in list(st.shard_ranges):
+                nxt = st.shard_ranges[s] // 2
+                if nxt <= self.base_ranges:
+                    del st.shard_ranges[s]
+                else:
+                    st.shard_ranges[s] = nxt
             if st.fanout > self.fanout:
                 st.fanout -= 1
 
@@ -309,14 +339,17 @@ def cluster_converged(cluster: KVCluster) -> bool:
     if len(nodes) < 2:
         return True
     if all(n.is_packed for n in nodes):
-        ref = nodes[0].backend.packed
-        ref_digest = ref.sync_digest()
+        # compare shard by shard (one store per node at shards=1); the
+        # reference node's digests are snapshotted once per shard
+        refs = [(ref, ref.sync_digest(), ref.value_root())
+                for ref in nodes[0].shard_stores]
         for other in nodes[1:]:
-            st = other.backend.packed
-            if len(ref_digest.diff(st.sync_digest())) != 0:
-                return False
-            if ref.value_root() != st.value_root():
-                return False
+            for (_, ref_digest, ref_vroot), st in zip(refs,
+                                                      other.shard_stores):
+                if len(ref_digest.diff(st.sync_digest())) != 0:
+                    return False
+                if ref_vroot != st.value_root():
+                    return False
         return True
     keys = set()
     for n in nodes:

@@ -247,6 +247,81 @@ class PackedPayload:
         return int(arrays + tables + values)
 
 
+def concat_payloads(payloads: Sequence[PackedPayload]) -> PackedPayload:
+    """Concatenate payloads with disjoint key sets into one wire object
+    under a union replica universe — the sender-side joiner for sharded
+    stores (one ``("store", payload)`` message covering several shards)."""
+    payloads = list(payloads)
+    if len(payloads) == 1:
+        return payloads[0]
+    ids: List[str] = []
+    index: Dict[str, int] = {}
+    for p in payloads:
+        for rid in p.replica_ids:
+            if rid not in index:
+                index[rid] = len(ids)
+                ids.append(rid)
+    Ru = len(ids)
+    M = sum(len(p) for p in payloads)
+    vv = np.zeros((M, Ru), np.int32)
+    did = np.full(M, NO_DOT, np.int32)
+    dn = np.zeros(M, np.int32)
+    kix = np.zeros(M, np.int32)
+    wall = np.zeros(M, np.float64)
+    keys: List[str] = []
+    values: List[Any] = []
+    off = 0
+    for p in payloads:
+        koff = len(keys)
+        keys.extend(p.keys)
+        n = len(p)
+        if not n:
+            continue
+        cols = np.asarray([index[r] for r in p.replica_ids], np.int64)
+        vv[off: off + n], did[off: off + n] = \
+            remap_rows(p.vv, p.dot_id, cols, Ru)
+        dn[off: off + n] = p.dot_n
+        wall[off: off + n] = p.wall
+        kix[off: off + n] = p.key_ix + koff
+        values.extend(p.values)
+        off += n
+    return PackedPayload(tuple(ids), tuple(keys), vv, did, dn, kix,
+                         tuple(values), wall)
+
+
+def split_payload(payload: PackedPayload, shards: int
+                  ) -> Dict[int, PackedPayload]:
+    """Partition a payload by key shard (top bits of the stable 64-bit key
+    hash — ``sharding.shard_of_key``) — the receiver-side router that lets
+    one wire payload land in per-shard stores.  Shards with no keys in the
+    payload are absent from the result."""
+    if shards <= 1:
+        return {0: payload}
+    from .sharding import shard_of_key
+    key_shard = [shard_of_key(k, shards) for k in payload.keys]
+    groups: Dict[int, List[int]] = {}
+    for ix, s in enumerate(key_shard):
+        groups.setdefault(s, []).append(ix)
+    if len(groups) <= 1:
+        return {s: payload for s in groups}
+    out: Dict[int, PackedPayload] = {}
+    n_keys = len(payload.keys)
+    for s, kixs in groups.items():
+        remap = np.full(n_keys, -1, np.int64)
+        remap[kixs] = np.arange(len(kixs))
+        rows = np.flatnonzero(remap[payload.key_ix] >= 0)
+        out[s] = PackedPayload(
+            replica_ids=payload.replica_ids,
+            keys=tuple(payload.keys[i] for i in kixs),
+            vv=payload.vv[rows],
+            dot_id=payload.dot_id[rows],
+            dot_n=payload.dot_n[rows],
+            key_ix=remap[payload.key_ix[rows]].astype(np.int32),
+            values=tuple(payload.values[int(r)] for r in rows),
+            wall=payload.wall[rows])
+    return out
+
+
 class PackedVersionStore:
     """The resident packed store.  All mutation is numpy; bulk merges hand
     one [N, K, R] tensor to ``core.batched.sync_mask`` or the fused Pallas
@@ -279,6 +354,9 @@ class PackedVersionStore:
         self.slot_hash = np.zeros(_INITIAL_SLOTS, _U64)
         self.digest = np.zeros(n_buckets, _U64)
         self._bucket_live = np.zeros(n_buckets, np.int64)
+        # tree root (xor of all live slot hashes — width-invariant), kept
+        # incrementally so the sharded phase-0 probe is one int compare
+        self._digest_root = 0
         # value root: xor-fold over live slots of mix(slot_hash ^ value
         # hash) — content equality beyond the clock+key digest (§6.1 covers
         # clocks only; clock-equal/value-different slots are invisible to
@@ -460,6 +538,7 @@ class PackedVersionStore:
         b = self._key_bucket[self.key_ix[s]]
         np.bitwise_xor.at(self.digest, b, self.slot_hash[s])
         np.subtract.at(self._bucket_live, b, 1)
+        self._digest_root ^= int(np.bitwise_xor.reduce(self.slot_hash[s]))
         self._value_root ^= int(np.bitwise_xor.reduce(
             _mix64(self.slot_hash[s] ^ self.val_hash[s])))
 
@@ -471,6 +550,15 @@ class PackedVersionStore:
         if not self.track_digests:
             self.rebuild_digests()
         return StoreDigest(self.digest.copy())
+
+    def digest_root(self) -> int:
+        """The tree root alone — the xor of all leaves, maintained
+        incrementally.  The phase-0 probe of a sharded delta round: two
+        stores whose roots (and value roots) agree are skipped for the
+        cost of 16 bytes, without snapshotting either tree."""
+        if not self.track_digests:
+            self.rebuild_digests()
+        return self._digest_root
 
     def value_root(self) -> int:
         """64-bit root of the store's *value content* (clock+key+value),
@@ -552,6 +640,7 @@ class PackedVersionStore:
         R = self.n_replicas
         self.digest = np.zeros(self.n_buckets, _U64)
         self._bucket_live = np.zeros(self.n_buckets, np.int64)
+        self._digest_root = 0
         self._value_root = 0
         if len(live):
             kixs = self.key_ix[live]
@@ -564,6 +653,7 @@ class PackedVersionStore:
             if values_too:
                 self.val_hash[live] = np.asarray(
                     [_hash_value(self.values[int(s)]) for s in live], _U64)
+            self._digest_root = int(np.bitwise_xor.reduce(hashes))
             self._value_root = int(np.bitwise_xor.reduce(
                 _mix64(hashes ^ self.val_hash[live])))
         return self.digest
@@ -573,15 +663,16 @@ class PackedVersionStore:
         if not self.check_bucket_index():
             return False
         saved = (self.digest, self.slot_hash.copy(), self._bucket_live,
-                 self.val_hash.copy(), self._value_root)
+                 self.val_hash.copy(), self._value_root, self._digest_root)
         try:
             rebuilt = self.rebuild_digests()
             return (np.array_equal(rebuilt, saved[0])
                     and np.array_equal(self._bucket_live, saved[2])
-                    and self._value_root == saved[4])
+                    and self._value_root == saved[4]
+                    and self._digest_root == saved[5])
         finally:
             (self.digest, self.slot_hash, self._bucket_live,
-             self.val_hash, self._value_root) = saved
+             self.val_hash, self._value_root, self._digest_root) = saved
 
     # -- boundary codec (object clocks at the client API edge only) --------
 
@@ -669,6 +760,7 @@ class PackedVersionStore:
                 self.dot_n[s: s + 1], self.key_ix[s: s + 1])[0]
             self.digest[bucket] ^= self.slot_hash[s]
             self._bucket_live[bucket] += 1
+            self._digest_root ^= int(self.slot_hash[s])
             self.val_hash[s] = _U64(_hash_value(value))
             self._value_root ^= int(_mix64(self.slot_hash[s]
                                            ^ self.val_hash[s]))
@@ -1034,6 +1126,7 @@ class PackedVersionStore:
                 self.slot_hash[dst] = new_hashes
                 np.bitwise_xor.at(self.digest, new_buckets, new_hashes)
                 np.add.at(self._bucket_live, new_buckets, 1)
+                self._digest_root ^= int(np.bitwise_xor.reduce(new_hashes))
                 vhs = np.asarray([_hash_value(payload.values[int(r)])
                                   for r in new_rows], _U64)
                 self.val_hash[dst] = vhs
@@ -1073,6 +1166,7 @@ class PackedVersionStore:
         out.slot_hash = self.slot_hash.copy()
         out.val_hash = self.val_hash.copy()
         out._value_root = self._value_root
+        out._digest_root = self._digest_root
         out.digest = self.digest.copy()
         out._bucket_live = self._bucket_live.copy()
         out._replica_hash = list(self._replica_hash)

@@ -20,7 +20,9 @@ from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, \
 from ..core import batched as B
 from ..core.kernel import Mechanism
 from .context import CausalContext
-from .packed import PackedPayload, PackedVersionStore
+from .packed import DIGEST_BUCKETS, PackedPayload, PackedVersionStore, \
+    concat_payloads, split_payload
+from .sharding import shard_of_key
 from .version import Version, clocks_of, sync_versions
 
 Payload = Union[Dict[str, FrozenSet[Version]], PackedPayload]
@@ -81,9 +83,20 @@ class ObjectBackend:
 
 
 class PackedBackend:
-    """Packed int32 clocks as the resident representation (DVV only)."""
+    """Packed int32 clocks as the resident representation (DVV only).
 
-    def __init__(self, mechanism: Mechanism, node_id: str):
+    With ``shards > 1`` the key space is cut by the stable 64-bit key hash
+    (``sharding.shard_of_key``) into that many independent
+    ``PackedVersionStore``s, each with its own (proportionally narrower)
+    digest tree — stores stay cache-sized, and compaction, digest rebuilds
+    and delta rounds are per-shard.  Every entry point routes by key
+    shard; cross-shard batches are grouped so each shard still runs its
+    one vectorized pass.  ``shards == 1`` is byte-identical to the
+    unsharded store.
+    """
+
+    def __init__(self, mechanism: Mechanism, node_id: str, *,
+                 shards: int = 1):
         if mechanism.name != "dvv":
             # The packed backend *implements* the DVV §5.3 update/sync in
             # arrays; running it under another mechanism would silently
@@ -91,19 +104,38 @@ class PackedBackend:
             raise ValueError(
                 f"packed backend implements DVV semantics; mechanism "
                 f"{mechanism.name!r} must use the object backend")
+        if shards < 1 or shards & (shards - 1):
+            raise ValueError(
+                f"shards must be a power of two >= 1, got {shards}")
         self.mechanism = mechanism
         self.node_id = node_id
-        self.packed = PackedVersionStore()
-        self.packed.intern_replica(node_id)
+        self.shards = shards
+        # Split the digest budget across shards so a sharded node's total
+        # leaf count starts where the unsharded one did (each store still
+        # widens itself with size).
+        buckets = max(DIGEST_BUCKETS // shards, 16)
+        self.stores: List[PackedVersionStore] = [
+            PackedVersionStore(n_buckets=buckets) for _ in range(shards)]
+        for st in self.stores:
+            st.intern_replica(node_id)
+
+    @property
+    def packed(self) -> PackedVersionStore:
+        """The single store of an unsharded backend (shard 0 otherwise) —
+        the pre-sharding attribute most introspection reaches for."""
+        return self.stores[0]
+
+    def store_for(self, key: str) -> PackedVersionStore:
+        return self.stores[shard_of_key(key, self.shards)]
 
     def versions(self, key: str) -> FrozenSet[Version]:
-        return self.packed.versions(key)           # edge decode, one key
+        return self.store_for(key).versions(key)   # edge decode, one key
 
     def apply_sync(self, key: str, incoming: FrozenSet[Version]
                    ) -> FrozenSet[Version]:
         """Object versions arrive from control-plane replication messages;
         encode at the boundary, then merge in arrays."""
-        self.packed.sync_key_objects(key, incoming)
+        self.store_for(key).sync_key_objects(key, incoming)
         return self.versions(key)
 
     def coordinate_update(self, key: str, value: Any,
@@ -112,38 +144,59 @@ class PackedBackend:
                           wall_time: float) -> Version:
         # Token-native: the ceiling entries go straight to int32 columns —
         # no clock object is built from the context.
-        ctx_vv = self.packed.ceiling_of_entries(context.ceiling_items())
-        vv, r_ix, dot_n = self.packed.update_key(
+        store = self.store_for(key)
+        ctx_vv = store.ceiling_of_entries(context.ceiling_items())
+        vv, r_ix, dot_n = store.update_key(
             key, ctx_vv, self.node_id, value, wall=wall_time)
         # Decode only the freshly minted clock for the PutAck (edge decode).
-        clock = B.decode(vv[: self.packed.n_replicas], r_ix, dot_n,
-                         self.packed.replica_ids)
+        clock = B.decode(vv[: store.n_replicas], r_ix, dot_n,
+                         store.replica_ids)
         return Version(clock, value, wall=wall_time)
 
     def coordinate_updates(self, batch: UpdateBatch, *,
                            mask_fn=None) -> List[Version]:
         """Batched §5.3 updates over distinct keys: one grouped encode →
         one vectorized update → one scatter (``PackedVersionStore.
-        update_keys``), instead of K independent ``sync_key`` walks."""
-        items = [(key, ctx.ceiling_items(), value, wall)
-                 for (key, ctx, value, wall) in batch]
-        vv, r_ix, dot_n = self.packed.update_keys(
-            items, self.node_id, mask_fn=mask_fn)
-        R = self.packed.n_replicas
-        return [
-            Version(B.decode(vv[i, :R], r_ix, int(dot_n[i]),
-                             self.packed.replica_ids),
+        update_keys``) *per shard touched*, instead of K independent
+        ``sync_key`` walks.  Results come back in batch order."""
+        groups: Dict[int, List[int]] = {}
+        for i, (key, _, _, _) in enumerate(batch):
+            groups.setdefault(shard_of_key(key, self.shards), []).append(i)
+        out: List[Optional[Version]] = [None] * len(batch)
+        for s, idxs in groups.items():
+            store = self.stores[s]
+            items = [(batch[i][0], batch[i][1].ceiling_items(),
+                      batch[i][2], batch[i][3]) for i in idxs]
+            vv, r_ix, dot_n = store.update_keys(
+                items, self.node_id, mask_fn=mask_fn)
+            R = store.n_replicas
+            for j, i in enumerate(idxs):
+                out[i] = Version(
+                    B.decode(vv[j, :R], r_ix, int(dot_n[j]),
+                             store.replica_ids),
                     batch[i][2], wall=batch[i][3])
-            for i in range(len(batch))]
+        return out                                 # type: ignore[return-value]
 
     def antientropy_payload(self, keys: Optional[Iterable[str]] = None
                             ) -> PackedPayload:
-        return self.packed.payload(keys)           # arrays out, zero decode
+        if self.shards == 1:
+            return self.stores[0].payload(keys)    # arrays out, zero decode
+        if keys is None:
+            return concat_payloads([st.payload() for st in self.stores])
+        by_shard: Dict[int, List[str]] = {}
+        for k in keys:
+            by_shard.setdefault(shard_of_key(k, self.shards), []).append(k)
+        return concat_payloads([self.stores[s].payload(ks)
+                                for s, ks in by_shard.items()])
 
     def receive_antientropy(self, payload: Payload, *,
                             mask_fn=None) -> int:
         if isinstance(payload, PackedPayload):     # arrays in, zero encode
-            return self.packed.apply_payload(payload, mask_fn=mask_fn)
+            if self.shards == 1:
+                return self.stores[0].apply_payload(payload, mask_fn=mask_fn)
+            return sum(
+                self.stores[s].apply_payload(part, mask_fn=mask_fn)
+                for s, part in split_payload(payload, self.shards).items())
         changed = 0
         for k, versions in payload.items():
             before = self.versions(k)
@@ -152,10 +205,10 @@ class PackedBackend:
         return changed
 
     def metadata_size(self, key: str) -> int:
-        return self.packed.metadata_size(key)
+        return self.store_for(key).metadata_size(key)
 
     def total_keys(self) -> int:
-        return len(self.packed.keys)
+        return sum(len(st.keys) for st in self.stores)
 
 
 def _as_object_payload(payload: Payload) -> Dict[str, FrozenSet[Version]]:
@@ -174,20 +227,44 @@ def _as_object_payload(payload: Payload) -> Dict[str, FrozenSet[Version]]:
 
 
 class ReplicaNode:
-    """Facade over a storage backend; the paper's §4.1 node-local steps."""
+    """Facade over a storage backend; the paper's §4.1 node-local steps.
+
+    ``shards`` partitions the key space (``sharding.shard_of_key``) into
+    that many per-shard packed stores.  The object backend keeps one dict
+    — sharding is a *physical* layout choice and must be observationally
+    invisible, which is exactly what the packed==object conformance suite
+    checks — but the node still records the logical shard count so
+    protocol layers (bootstrap, handoff) can filter by shard on either
+    backend.
+    """
 
     def __init__(self, node_id: str, mechanism: Mechanism,
-                 packed: Optional[bool] = None):
+                 packed: Optional[bool] = None, *, shards: int = 1):
         self.node_id = node_id
         self.mechanism = mechanism
+        self.shards = shards
         if packed is None:
             packed = mechanism.name == "dvv"
-        self.backend = (PackedBackend if packed else ObjectBackend)(
-            mechanism, node_id)
+        self.backend = (
+            PackedBackend(mechanism, node_id, shards=shards) if packed
+            else ObjectBackend(mechanism, node_id))
 
     @property
     def is_packed(self) -> bool:
         return isinstance(self.backend, PackedBackend)
+
+    # -- shard routing -----------------------------------------------------
+    def shard_of(self, key: str) -> int:
+        return shard_of_key(key, self.shards)
+
+    def store_for(self, key: str) -> PackedVersionStore:
+        """The packed store holding ``key`` (packed backends only)."""
+        return self.backend.store_for(key)      # type: ignore[union-attr]
+
+    @property
+    def shard_stores(self) -> List[PackedVersionStore]:
+        """All per-shard packed stores (packed backends only)."""
+        return self.backend.stores              # type: ignore[union-attr]
 
     def versions(self, key: str) -> FrozenSet[Version]:
         return self.backend.versions(key)
@@ -232,7 +309,10 @@ class ReplicaNode:
                             ) -> Payload:
         return self.backend.antientropy_payload(keys)
 
-    def receive_antientropy(self, payload: Payload) -> int:
+    def receive_antientropy(self, payload: Payload, *,
+                            mask_fn=None) -> int:
+        if isinstance(self.backend, PackedBackend):
+            return self.backend.receive_antientropy(payload, mask_fn=mask_fn)
         return self.backend.receive_antientropy(payload)
 
     # -- introspection -------------------------------------------------------------

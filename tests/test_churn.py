@@ -39,13 +39,13 @@ MAX_NODES = 6
 # The schedule interpreter (shared by both backends and the fuzzer).
 # ---------------------------------------------------------------------------
 
-def _run_schedule(seed, ops, packed, quiesce=True):
+def _run_schedule(seed, ops, packed, quiesce=True, shards=1):
     """Interpret one churn schedule.  All choices are resolved against
     *current* membership (indices mod the live node list), so the same op
     list is meaningful whatever the interleaving did to the cluster."""
     net = SimNetwork(seed=seed)
     c = KVCluster(BASE_NODES, DVV_MECHANISM, packed=packed, network=net,
-                  seed=seed)
+                  seed=seed, shards=shards)
     driver = GossipDriver(c, period=6.0, seed=seed)
     contexts = {}
     next_id = len(BASE_NODES)
@@ -138,9 +138,9 @@ def _assert_backends_agree(cp, co, tag):
         assert gp.context == go.context, (tag, k)
 
 
-def _conformance(seed, ops, tag):
-    cp, _ = _run_schedule(seed, ops, packed=True)
-    co, _ = _run_schedule(seed, ops, packed=False)
+def _conformance(seed, ops, tag, shards=1):
+    cp, _ = _run_schedule(seed, ops, packed=True, shards=shards)
+    co, _ = _run_schedule(seed, ops, packed=False, shards=shards)
     _assert_replicas_agree(cp, ("packed", tag))
     _assert_replicas_agree(co, ("object", tag))
     _assert_backends_agree(cp, co, tag)
@@ -182,6 +182,15 @@ def _random_ops(seed, n_ops=40):
 @pytest.mark.parametrize("seed", [0, 7, 23])
 def test_churn_conformance_pinned(seed):
     _conformance(seed, _random_ops(seed), seed)
+
+
+@pytest.mark.parametrize("seed", [0, 23])
+def test_churn_conformance_pinned_sharded(seed):
+    """The same schedules with the store split across 4 hash shards:
+    placement, per-shard gossip, rebalance-on-join and handoff-on-depart
+    must leave the sharded stores observationally identical to the
+    single-dict object backend."""
+    _conformance(seed, _random_ops(seed), ("sharded", seed), shards=4)
 
 
 def test_churn_heavy_membership_schedule():
@@ -267,9 +276,10 @@ try:
     @settings(max_examples=200, deadline=None,
               suppress_health_check=[HealthCheck.too_slow])
     @given(st.integers(min_value=0, max_value=1 << 20),
-           st.lists(_op, min_size=4, max_size=28))
-    def test_churn_conformance_fuzzed(seed, ops):
-        _conformance(seed, ops, (seed, len(ops)))
+           st.lists(_op, min_size=4, max_size=28),
+           st.sampled_from([1, 4]))
+    def test_churn_conformance_fuzzed(seed, ops, shards):
+        _conformance(seed, ops, (seed, len(ops), shards), shards=shards)
 
     @pytest.mark.slow
     @settings(max_examples=25, deadline=None,
