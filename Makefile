@@ -5,21 +5,25 @@
 # dedicated lane); `make test-churn` runs the membership/fault-injection
 # conformance suite (pinned fast schedules + the slow hypothesis phase);
 # `make test-read` runs the batched read-plane + read-repair suite
-# (including its slow kernel/fuzz phases).
+# (including its slow kernel/fuzz phases); `test-serving` runs the
+# coalescing serving-plane suite (conformance + the slow scheduled-churn
+# phase).
 # `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
 # looped client calls and writes BENCH_client_api.json; `bench-read`
 # sweeps the one-sweep read plane (keys x divergence, repair on/off) and
-# writes BENCH_read_path.json; `lint` is a dependency-free syntax/bytecode
-# pass (the container has no flake8/ruff baked in).
+# writes BENCH_read_path.json; `bench-serving` runs the closed-loop
+# coalescing sweep and writes BENCH_serving.json; `lint` is a
+# dependency-free syntax/bytecode pass (the container has no flake8/ruff
+# baked in).
 
 PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-all test-property test-churn test-read test-shard \
-	bench-smoke bench bench-delta bench-client bench-churn bench-read \
-	bench-shard lint check
+	test-serving bench-smoke bench bench-delta bench-client bench-churn \
+	bench-read bench-shard bench-serving lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -39,6 +43,9 @@ test-read:
 test-shard:
 	$(PY) -m pytest -q -m shard
 
+test-serving:
+	$(PY) -m pytest -q -m serving
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
@@ -50,6 +57,8 @@ bench-smoke:
 	$(PY) -c "from benchmarks.read_bench import read_path_rows; \
 	          print('\n'.join(read_path_rows((64,), (0.1,), \
 	          json_path=None, reps=1)))"
+	$(PY) -c "from benchmarks.serving_bench import rows; \
+	          print('\n'.join(rows()))"
 
 bench:
 	$(PY) -m benchmarks.run
@@ -70,6 +79,9 @@ bench-read:
 
 bench-shard:
 	$(PY) -m benchmarks.shard_bench
+
+bench-serving:
+	$(PY) -m benchmarks.serving_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

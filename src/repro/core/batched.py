@@ -359,8 +359,17 @@ class BucketedSyncMask:
         return out[:N, :K]
 
     def cache_info(self) -> Dict[str, object]:
+        total = self.hits + self.misses
         return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hits / total, 4) if total else 0.0,
                 "buckets": sorted(self._seen)}
+
+    def reset_stats(self) -> None:
+        """Zero the hit/miss counters; the bucket set (and the compiled
+        callables behind it) stays warm.  Lets the serving benchmark
+        report cross-flush hit rates per measurement window."""
+        self.hits = 0
+        self.misses = 0
 
 
 #: Module-level jnp-reference instance.  Product delta rounds use the numpy

@@ -99,6 +99,18 @@ class BucketedReadSweep:
         return (np.asarray(mask)[:N, :K],
                 np.asarray(ceil)[:N, :R].astype(np.int64))
 
+    def cache_info(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "hit_rate": round(self.hits / total, 4) if total else 0.0,
+                "buckets": sorted(self._seen)}
+
+    def reset_stats(self) -> None:
+        """Zero the counters without cooling the bucket set — per-window
+        cross-flush hit-rate accounting (mirrors ``BucketedSyncMask``)."""
+        self.hits = 0
+        self.misses = 0
+
 
 #: Module-level instance (one shared bucket cache, like
 #: ``dvv_sync_mask_bucketed``).

@@ -8,6 +8,15 @@ finished requests release their slot and queued requests claim it at the
 next step boundary (cache slot re-initialized).  Session cursors persist
 through the replicated store, so a different serving node can adopt any
 session (see examples/serve_replicated.py for the failover drill).
+
+``--store-workload`` skips the model entirely and drives the store's
+coalescing serving plane with the closed-loop workload engine
+(store/serving.py): zipfian GET → think → PUT(token) traffic from up to
+millions of logical sessions, scheduler flush deadlines and (with
+``--gossip-period``) continuous anti-entropy all on one simulated clock:
+
+    PYTHONPATH=src python -m repro.launch.serve --store-workload \
+        --store-mode both --sessions 1000000 --store-steps 1500
 """
 from __future__ import annotations
 
@@ -92,15 +101,75 @@ class BatchScheduler:
             context=res.context, via=self.node, client_id=self.node)
 
 
+def store_workload_main(args: argparse.Namespace) -> int:
+    """Drive the coalescing serving plane with the closed-loop engine
+    (no model in the loop); prints one JSON summary per mode."""
+    from ..store import ClosedLoopEngine, GossipDriver
+
+    modes = (("coalesced", "direct") if args.store_mode == "both"
+             else (args.store_mode,))
+    summaries = {}
+    for mode in modes:
+        net = SimNetwork(seed=7, jitter=0.0)
+        cluster = KVCluster(tuple(f"n{i}" for i in range(5)),
+                            DVV_MECHANISM, replication=3, network=net,
+                            read_quorum=2, write_quorum=2, seed=7)
+        driver = None
+        if args.gossip_period > 0:
+            driver = GossipDriver(cluster, period=args.gossip_period,
+                                  seed=7)
+            driver.start()          # timers interleave with the engine
+        eng = ClosedLoopEngine(
+            cluster, sessions=args.sessions, keys=args.keys,
+            zipf_s=args.zipf, concurrency=args.concurrency,
+            mode=mode, via="n0", seed=args.seed, read_repair=True,
+            max_batch=args.max_batch, max_delay=args.max_delay)
+        out = eng.run(args.store_steps)
+        if driver is not None:
+            out["gossip"] = {"rounds": driver.rounds,
+                             "wire_bytes": driver.wire_bytes()}
+            driver.stop()
+        summaries[mode] = out
+        print(json.dumps(out, indent=1))
+    if len(summaries) == 2:
+        d, c = summaries["direct"], summaries["coalesced"]
+        if c["plane_per_1k_ops"]:
+            print(f"plane ratio direct/coalesced: "
+                  f"{d['plane_per_1k_ops'] / c['plane_per_1k_ops']:.1f}x, "
+                  f"bytes/op {c['bytes_per_op']:.1f} vs "
+                  f"{d['bytes_per_op']:.1f}")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    g = ap.add_argument_group("store workload (no model in the loop)")
+    g.add_argument("--store-workload", action="store_true",
+                   help="run the closed-loop store workload engine")
+    g.add_argument("--store-mode", default="both",
+                   choices=["coalesced", "direct", "both"])
+    g.add_argument("--sessions", type=int, default=1_000_000)
+    g.add_argument("--keys", type=int, default=10_000)
+    g.add_argument("--zipf", type=float, default=0.9)
+    g.add_argument("--concurrency", type=int, default=256)
+    g.add_argument("--store-steps", type=int, default=500)
+    g.add_argument("--max-batch", type=int, default=256)
+    g.add_argument("--max-delay", type=float, default=2.0)
+    g.add_argument("--gossip-period", type=float, default=0.0,
+                   help="anti-entropy period in sim ticks (0 = off)")
+    g.add_argument("--seed", type=int, default=11)
     args = ap.parse_args()
+
+    if args.store_workload:
+        return store_workload_main(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --store-workload is given")
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -9,6 +9,7 @@ from .packed import MergedRead, PackedPayload, PackedVersionStore, \
     StoreDigest, concat_payloads, key_bucket, quorum_merge_many, \
     split_payload
 from .replica import ReplicaNode
+from .serving import ClosedLoopEngine, OpScheduler, PendingOp
 from .sharding import HashRing, key_hash64, shard_of_key
 from .version import Version, clocks_of, sync_versions, values_of
 
@@ -17,6 +18,7 @@ __all__ = [
     "CausalContext", "EMPTY_CONTEXT",
     "SimNetwork", "Unavailable",
     "GossipDriver", "cluster_converged",
+    "OpScheduler", "PendingOp", "ClosedLoopEngine",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
     "PackedVersionStore", "PackedPayload", "MergedRead",
     "quorum_merge_many",

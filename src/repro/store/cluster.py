@@ -188,6 +188,13 @@ class KVCluster:
         self._gossip_step = 0
         self._node_gossip_step: Dict[str, int] = {}
         self._gossip_base_cache: Dict[str, int] = {}
+        # Plane-invocation meters: each fixed-cost entry into a read or
+        # write plane (grouping, union-universe gather, jit-cache lookup,
+        # per-destination payload assembly) counts once, however many keys
+        # ride it.  The coalescing scheduler's whole thesis is driving
+        # this number per-op toward zero; the serving benchmark reads it.
+        self.plane_reads = 0
+        self.plane_writes = 0
 
     # -- membership (dynamic: nodes join and leave at runtime) ----------------
     def add_node(self, node_id: str, *, bootstrap: bool = True,
@@ -352,6 +359,36 @@ class KVCluster:
         candidates.sort(key=lambda r: (r != proxy,))
         return candidates[0]
 
+    # -- admission probes (non-raising; the op-scheduler's per-op triage) -----
+    def probe_read(self, key: str, *, via: str, quorum: int) -> bool:
+        """Would a GET for ``key`` via ``via`` assemble its read quorum
+        right now?  Pure reachability arithmetic — no store touched, no
+        exception raised — so a scheduler can fail one op without
+        poisoning its whole flush."""
+        if via in self.network.down:
+            return False
+        return len(self._reachable_replicas(via, key)) >= quorum
+
+    def probe_write(self, key: str, *, via: str) -> Tuple[Optional[str], int]:
+        """``(coordinator, predicted_acks)`` for a PUT of ``key`` via
+        ``via`` — coordinator ``None`` when none is reachable.  Predicted
+        acks = coordinator + destinations currently reachable from it;
+        exact when ``drop_rate == 0`` (the conformance regime), an upper
+        bound otherwise."""
+        if via in self.network.down:
+            return None, 0
+        try:
+            coord = self._pick_coordinator(via, key)
+        except Unavailable:
+            return None, 0
+        acks = 1 + sum(1 for r in self.replicas_for(key)
+                       if r != coord and self.network.reachable(coord, r))
+        return coord, acks
+
+    @property
+    def plane_invocations(self) -> int:
+        return self.plane_reads + self.plane_writes
+
     # -- client operations -------------------------------------------------------
     def _object_read(self, key: str, chosen: Sequence[ReplicaNode]
                      ) -> FrozenSet[Version]:
@@ -374,6 +411,7 @@ class KVCluster:
             raise Unavailable(
                 f"read quorum {quorum} unreachable for {key!r} via {proxy}")
         chosen = [self.nodes[r] for r in reachable[:max(quorum, 1)]]
+        self.plane_reads += 1
         if all(n.is_packed for n in chosen):
             # Array-native read path: quorum merge + §5.4 ceiling token
             # straight from the int32 columns (the key's shard store) —
@@ -439,7 +477,10 @@ class KVCluster:
         object_repairs: Dict[str, Dict[str, FrozenSet[Version]]] = {}
         packed_keys = [k for k, ids in chosen.items()
                        if all(self.nodes[r].is_packed for r in ids)]
+        # one plane entry for the whole packed batch; each mixed/object
+        # key below falls back to its own per-key merge (counted there)
         if packed_keys:
+            self.plane_reads += 1
             sweep_fn = None
             if use_kernel:
                 from ..kernels.dvv_ops import dvv_read_sweep_bucketed
@@ -461,6 +502,7 @@ class KVCluster:
         for k, ids in chosen.items():
             if k in results:
                 continue
+            self.plane_reads += 1
             acc = self._object_read(k, [self.nodes[r] for r in ids])
             results[k] = _object_result(acc)
             if repair:
@@ -498,6 +540,7 @@ class KVCluster:
 
         ctx = CausalContext.coerce(context)
         coordinator = self._pick_coordinator(proxy, key, coordinator)
+        self.plane_writes += 1
         node = self.nodes[coordinator]
         version = node.coordinate_update(
             key, value, ctx, client_id=client_id,
@@ -569,6 +612,7 @@ class KVCluster:
             self.clock_time += 1.0
             walls[key] = self.clock_time
         for coord, keys in groups.items():
+            self.plane_writes += 1
             node = self.nodes[coord]
             batch = [(k, ctxs[k], items[k][0], walls[k]) for k in keys]
             versions = node.coordinate_updates(

@@ -144,6 +144,14 @@ class GossipDriver:
         """Advance simulated time, firing gossip along the way."""
         self.cluster.network.advance(duration)
 
+    def run_until(self, t: float) -> None:
+        """Advance to absolute simulated time ``t`` (no-op if in the
+        past).  Gossip timers, scheduler flush deadlines and workload
+        think-timers all live on the one SimNetwork heap, so any driver
+        advancing the shared clock fires all of them in deterministic
+        ``(fire_at, seq)`` order — the serving engine's interleave."""
+        self.cluster.network.run_until(t)
+
     # -- scheduling --------------------------------------------------------
 
     def _adopt_new_nodes(self) -> None:

@@ -199,8 +199,23 @@ class SimNetwork:
                        (self.now + max(0.0, delay), self._timer_seq, callback))
         return self._timer_seq
 
+    def schedule_at(self, fire_at: float, callback: Callable[[], None]) -> int:
+        """Arm ``callback`` at *absolute* simulated time ``fire_at`` (past
+        times fire on the next ``advance``).  The op-scheduler flush hook:
+        deadlines are points on the shared clock, not relative delays."""
+        return self.schedule(fire_at - self.now, callback)
+
     def cancel(self, timer_id: int) -> None:
         self._cancelled.add(timer_id)
+
+    def next_timer_due(self) -> Optional[float]:
+        """Earliest live timer deadline, or ``None`` — how an event loop
+        steps straight to the next interesting instant instead of polling
+        fixed increments.  Lazily prunes cancelled heap heads."""
+        while self._timers and self._timers[0][1] in self._cancelled:
+            _, seq, _ = heapq.heappop(self._timers)
+            self._cancelled.discard(seq)
+        return self._timers[0][0] if self._timers else None
 
     def timers_pending(self) -> int:
         return sum(1 for (_, seq, _) in self._timers

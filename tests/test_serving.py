@@ -1,0 +1,693 @@
+"""Coalescing serving plane (store/serving.py) conformance + mechanics.
+
+The load-bearing property is **semantic transparency**: a flush that
+coalesces many sessions' ops into shared plane calls must produce, for
+every op, the byte-identical result the op would have gotten executing
+alone in submission order — same ``GetResult`` tuples (values, contexts,
+resolution walls), same ``PutAck``s, same raised ``Unavailable``s — and
+must leave every replica in the identical per-key version state.  The
+conformance harness here drives same-seed twin clusters (one scheduled,
+one sequential) through randomized multi-session schedules and asserts
+exactly that, on both store backends.
+
+Mechanics get their own tests: flush triggers at the ``max_batch`` /
+``max_delay`` boundaries, same-key conflict sequencing into distinct put
+phases, read-your-writes inside one flush, per-op admission isolation
+under node failures, the session token-codec memo, and the plane-call
+accounting the serving benchmark's ≥5× claim rests on.
+
+The hypothesis phase (``slow``+``serving`` markers — the ``make
+test-serving`` lane) reuses the churn suite's schedule machinery
+(op vocabulary, fuzzer, convergence asserts) with an ``OpScheduler``
+splicing the client ops, checking packed-vs-object backend agreement
+while flush timers interleave with gossip, partitions and membership
+churn on the shared simulated clock.
+"""
+import random
+
+import pytest
+
+from repro.core import DVV_MECHANISM
+from repro.store import (GossipDriver, KVCluster, OpScheduler, SimNetwork,
+                         Unavailable)
+
+import test_churn as churn
+
+pytestmark = pytest.mark.serving
+
+NODES = ("n0", "n1", "n2", "n3", "n4")
+KEYS = tuple(f"k{i}" for i in range(8))
+
+
+def _mk_cluster(seed, packed, nodes=NODES, replication=3):
+    net = SimNetwork(seed=seed)
+    return KVCluster(nodes, DVV_MECHANISM, packed=packed, network=net,
+                     seed=seed, replication=replication,
+                     read_quorum=2, write_quorum=2)
+
+
+# ---------------------------------------------------------------------------
+# Coalesced == sequential conformance.
+# ---------------------------------------------------------------------------
+#
+# A schedule is a list of rounds; a round is a list of (session, kind,
+# keys) triples.  Contexts follow the paper's client workflow: a session
+# carries the (byte-encoded) token from its latest GET of a key into its
+# next PUT of that key.  Both runners snapshot the token map at round
+# start — in the scheduled run a put submitted this round can only carry
+# a token from an *earlier* flush, so the sequential run must use the
+# same discipline for the workloads to be identical.
+
+def _schedule(seed, rounds=8, sessions=4):
+    rng = random.Random(seed)
+    out = []
+    for _ in range(rounds):
+        batch = []
+        for s in range(sessions):
+            if rng.random() < 0.85:
+                kind = "put" if rng.random() < 0.5 else "get"
+                ks = rng.sample(KEYS, 1 + (rng.random() < 0.3))
+                batch.append((s, kind, tuple(ks)))
+        out.append(batch)
+    return out
+
+
+def _put_items(s, r, j, ks, snap):
+    return {k: (f"v{s}.{r}.{j}", snap.get((s, k))) for k in ks}
+
+
+def _record_gets(client, ctxs, s, ks, res):
+    for k in ks:
+        ctxs[(s, k)] = client.encode_context(res[k].context)
+
+
+def _run_sequential(cluster, sched, n_sessions):
+    clients = {s: _mk_client(cluster, s) for s in range(n_sessions)}
+    results, ctxs = [], {}
+    for r, batch in enumerate(sched):
+        snap = dict(ctxs)
+        for j, (s, kind, ks) in enumerate(batch):
+            cl = clients[s]
+            try:
+                if kind == "get":
+                    res = cl.get_many(list(ks))
+                    _record_gets(cl, ctxs, s, ks, res)
+                else:
+                    res = cl.put_many(_put_items(s, r, j, ks, snap))
+            except Unavailable as e:
+                res = ("unavailable", str(e))
+            results.append(res)
+        cluster.deliver_replication()
+    return results
+
+
+def _mk_client(cluster, s):
+    from repro.store import KVClient
+    return KVClient(cluster, f"s{s}", via="n0", read_quorum=2,
+                    write_quorum=2, read_repair=True)
+
+
+def _run_coalesced(cluster, sched, n_sessions, *, max_batch=64,
+                   max_delay=2.0, by_timer=False):
+    sch = OpScheduler(cluster, via="n0", max_batch=max_batch,
+                      max_delay=max_delay)
+    clients = {s: sch.session(f"s{s}", read_quorum=2, write_quorum=2,
+                              read_repair=True)
+               for s in range(n_sessions)}
+    results, ctxs = [], {}
+    for r, batch in enumerate(sched):
+        snap = dict(ctxs)
+        pend = []
+        for j, (s, kind, ks) in enumerate(batch):
+            cl = clients[s]
+            if kind == "get":
+                pend.append((s, kind, ks, cl.submit_get(list(ks))))
+            else:
+                pend.append((s, kind, ks,
+                             cl.submit_put(_put_items(s, r, j, ks, snap))))
+        if by_timer:
+            cluster.network.advance(max_delay + 0.001)
+        else:
+            sch.flush()
+        for s, kind, ks, op in pend:
+            assert op.done, "flush must complete every queued op"
+            try:
+                res = op.result()
+            except Unavailable as e:
+                res = ("unavailable", str(e))
+            results.append(res)
+            if kind == "get" and not isinstance(res, tuple):
+                _record_gets(clients[s], ctxs, s, ks, res)
+        cluster.deliver_replication()
+    return results, sch
+
+
+def _assert_state_identical(ca, cb, tag):
+    assert ca.clock_time == cb.clock_time, tag
+    for k in KEYS:
+        for n in ca.nodes:
+            assert ca.nodes[n].versions(k) == cb.nodes[n].versions(k), \
+                (tag, n, k)
+
+
+@pytest.mark.parametrize("packed", [True, False],
+                         ids=["packed", "object"])
+@pytest.mark.parametrize("seed", [0, 7, 19])
+def test_coalesced_equals_sequential(seed, packed):
+    """Randomized multi-session schedules: per-op results byte-identical
+    to solo execution, final replica state identical, both backends."""
+    sched = _schedule(seed)
+    cs = _mk_cluster(seed, packed)
+    seq = _run_sequential(cs, sched, 4)
+    cc = _mk_cluster(seed, packed)
+    coal, sch = _run_coalesced(cc, sched, 4)
+    assert coal == seq
+    _assert_state_identical(cc, cs, ("state", seed, packed))
+    assert sch.ops_submitted == sum(len(b) for b in sched)
+    assert sch.pending == 0
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_coalesced_equals_sequential_size_flushes(seed):
+    """max_batch=4 forces size-triggered flushes mid-round — different
+    flush composition, same per-op results."""
+    sched = _schedule(seed, rounds=6, sessions=6)
+    cs = _mk_cluster(seed, True)
+    seq = _run_sequential(cs, sched, 6)
+    cc = _mk_cluster(seed, True)
+    coal, sch = _run_coalesced(cc, sched, 6, max_batch=4)
+    assert coal == seq
+    _assert_state_identical(cc, cs, ("state", seed))
+    assert sch.flush_triggers.get("size", 0) > 0
+
+
+def test_coalesced_equals_sequential_timer_flushes():
+    """Timer-triggered flushes (the steady-state trigger) preserve the
+    same per-op results as manual flushing and solo execution."""
+    sched = _schedule(23)
+    cs = _mk_cluster(23, True)
+    seq = _run_sequential(cs, sched, 4)
+    cc = _mk_cluster(23, True)
+    coal, sch = _run_coalesced(cc, sched, 4, by_timer=True)
+    assert coal == seq
+    _assert_state_identical(cc, cs, "timer-state")
+    assert sch.flush_triggers.get("timer", 0) > 0
+    assert sch.flush_triggers.get("manual", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# Flush-trigger boundaries.
+# ---------------------------------------------------------------------------
+
+def test_flush_on_exact_max_batch():
+    """The max_batch'th submit flushes synchronously and cancels the
+    pending delay timer."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=3, max_delay=5.0)
+    ops = [sch.submit_get([f"k{i}"]) for i in range(3)]
+    assert all(op.done for op in ops)
+    assert sch.flush_triggers == {"size": 1}
+    assert sch._timer is None
+    assert c.network.next_timer_due() is None   # timer truly cancelled
+    assert sch.pending == 0
+
+
+def test_timer_flush_with_queue_of_one():
+    """A single queued op flushes exactly max_delay ticks after submit."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=64, max_delay=4.0)
+    op = sch.submit_get(["k0"])
+    c.network.advance(3.999)
+    assert not op.done
+    c.network.advance(0.002)
+    assert op.done
+    assert op.latency == pytest.approx(4.0, abs=0.01)
+    assert sch.flush_triggers == {"timer": 1}
+
+
+def test_empty_flush_is_a_noop():
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0")
+    assert sch.flush() == 0
+    assert sch.flushes == 0
+    assert sch.stats()["plane_calls"] == 0
+
+
+def test_submit_during_flush_lands_in_next_batch():
+    """Ops submitted from completion callbacks defer to the next flush;
+    if they re-trip max_batch the outer drain loop runs them before
+    returning."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=2, max_delay=5.0)
+    follow = []
+
+    def chain(op):
+        follow.extend(sch.submit_get(["k5"]) for _ in range(2))
+
+    first = sch.submit_get(["k0"])
+    first.on_done(chain)
+    sch.submit_get(["k1"])          # trips max_batch → flush → chain()
+    assert first.done
+    assert all(op.done for op in follow)   # drained by the outer loop
+    assert sch.flushes == 2
+
+
+# ---------------------------------------------------------------------------
+# Ordering semantics inside one flush.
+# ---------------------------------------------------------------------------
+
+def test_same_key_conflicts_sequence_into_put_phases():
+    """Two same-context puts to one key in one flush land in distinct
+    put phases and match sequential execution exactly: concurrent-writer
+    siblings (DVV keeps both — neither context covers the other's dot),
+    walls assigned in submission order."""
+    cs = _mk_cluster(0, True)
+    ca, cb = _mk_client(cs, 0), _mk_client(cs, 1)
+    ca.put_many({"kx": ("v0", None)})
+    ctx = cs.get("kx", via="n0", quorum=2).context
+    ca.put_many({"kx": ("va", ctx)})
+    cb.put_many({"kx": ("vb", ctx)})
+    want = cs.get("kx", via="n0", quorum=2)
+
+    cc = _mk_cluster(0, True)
+    sch = OpScheduler(cc, via="n0", max_batch=64)
+    a, b = sch.session("s0"), sch.session("s1")
+    a.submit_put({"kx": ("v0", None)})
+    sch.flush()
+    ctx2 = cc.get("kx", via="n0", quorum=2).context
+    assert ctx2 == ctx
+    pa = a.submit_put({"kx": ("va", ctx2)})
+    pb = b.submit_put({"kx": ("vb", ctx2)})
+    sch.flush()
+    assert pa.done and pb.done
+    got = cc.get("kx", via="n0", quorum=2)
+    assert got == want
+    assert got.siblings == 2            # concurrent writers both survive
+    assert got.value == "vb"            # later wall wins resolution
+    assert sch.phases_run >= 3          # seed + two conflict phases
+
+
+def test_read_your_writes_within_one_flush():
+    """put(k) then get(k) submitted into the same flush: the get phase
+    plans after the put phase, so the session reads its own write."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=64)
+    s = sch.session("s0")
+    pw = s.submit_put({"k0": ("mine", None)})
+    rd = s.submit_get(["k0"])
+    sch.flush()
+    assert pw.done and rd.done
+    assert "mine" in rd.result()["k0"].values
+
+
+def test_gets_float_past_puts_on_other_keys():
+    """A get on an untouched key joins the first get phase even when puts
+    on other keys were queued before it — fewer phases, same results."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=64)
+    s = sch.session("s0")
+    s.submit_get(["k0"])
+    s.submit_put({"k1": ("v", None)})
+    s.submit_get(["k2"])            # floats into the k0 get phase
+    s.submit_put({"k3": ("w", None)})   # joins the k1 put phase
+    sch.flush()
+    assert sch.phases_run == 2
+    assert sch.get_calls == 1 and sch.put_calls == 1
+
+
+def test_put_submission_order_is_global():
+    """Puts never reorder across sessions: walls are assigned in
+    submission order, so the resolved register matches sequential
+    last-writer-wins for concurrent siblings."""
+    cs = _mk_cluster(5, True)
+    sa = _mk_client(cs, 0)
+    sb = _mk_client(cs, 1)
+    sa.put_many({"kz": ("first", None)})
+    sb.put_many({"kz": ("second", None)})
+    want = cs.get("kz", via="n0", quorum=2)
+
+    cc = _mk_cluster(5, True)
+    sch = OpScheduler(cc, via="n0")
+    sch.session("s0").submit_put({"kz": ("first", None)})
+    sch.session("s1").submit_put({"kz": ("second", None)})
+    sch.flush()
+    got = cc.get("kz", via="n0", quorum=2)
+    assert got == want
+    assert got.value == "second"
+
+
+# ---------------------------------------------------------------------------
+# Per-op admission isolation under failures.
+# ---------------------------------------------------------------------------
+
+def _partitioned_keys(c):
+    """One key whose read quorum survives the down node and one whose
+    doesn't (probed, so the choice tracks the ring placement)."""
+    ok = bad = None
+    for i in range(64):
+        k = f"p{i}"
+        if c.probe_read(k, via="n0", quorum=2):
+            ok = ok or k
+        else:
+            bad = bad or k
+        if ok and bad:
+            return ok, bad
+    raise AssertionError("no suitable keys found")
+
+
+@pytest.mark.parametrize("packed", [True, False], ids=["packed", "object"])
+def test_per_op_failure_isolation(packed):
+    """With a replica down, only the ops whose solo call would raise
+    ``Unavailable`` fail; flush-mates on healthy keys succeed with the
+    sequential-identical results."""
+    cs = _mk_cluster(1, packed, nodes=("n0", "n1", "n2", "n3"),
+                     replication=2)
+    cc = _mk_cluster(1, packed, nodes=("n0", "n1", "n2", "n3"),
+                     replication=2)
+    for c in (cs, cc):
+        c.put("seed", "x", via="n0")   # identical warm-up
+        c.deliver_replication()
+        c.network.fail_node("n3")
+    ok_key, bad_key = _partitioned_keys(cs)
+    assert _partitioned_keys(cc) == (ok_key, bad_key)
+
+    # sequential reference
+    seq = []
+    cli = _mk_client(cs, 0)
+    for kind, key in [("get", ok_key), ("get", bad_key),
+                      ("put", ok_key), ("put", bad_key)]:
+        try:
+            if kind == "get":
+                seq.append(cli.get_many([key]))
+            else:
+                seq.append(cli.put_many({key: (f"w.{key}", None)}))
+        except Unavailable:
+            seq.append("unavailable")
+
+    sch = OpScheduler(cc, via="n0")
+    s = sch.session("s0", read_quorum=2, write_quorum=2, read_repair=True)
+    ops = [s.submit_get([ok_key]), s.submit_get([bad_key]),
+           s.submit_put({ok_key: (f"w.{ok_key}", None)}),
+           s.submit_put({bad_key: (f"w.{bad_key}", None)})]
+    sch.flush()
+    coal = []
+    for op in ops:
+        try:
+            coal.append(op.result())
+        except Unavailable:
+            coal.append("unavailable")
+    assert coal == seq
+    assert coal[0] != "unavailable" and coal[1] == "unavailable"
+
+
+def test_quorum_miss_put_still_writes_durably():
+    """A put predicted to miss its write quorum runs solo and reports
+    ``Unavailable`` — but the write is durable at the coordinator and
+    visible after the node recovers (the single-call contract)."""
+    c = _mk_cluster(2, True, nodes=("n0", "n1", "n2", "n3"), replication=2)
+    c.network.fail_node("n3")
+    _, bad_key = _partitioned_keys(c)
+    sch = OpScheduler(c, via="n0")
+    op = sch.session("s0", write_quorum=2).submit_put(
+        {bad_key: ("survives", None)})
+    sch.flush()
+    with pytest.raises(Unavailable):
+        op.result()
+    c.network.recover_node("n3")
+    c.deliver_replication()
+    assert "survives" in c.get(bad_key, via="n0", quorum=2).values
+
+
+def test_proxy_down_fails_whole_flush():
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0")
+    op = sch.submit_get(["k0"])
+    c.network.fail_node("n0")
+    sch.flush()
+    with pytest.raises(Unavailable):
+        op.result()
+
+
+# ---------------------------------------------------------------------------
+# Token-codec memo (KVClient).
+# ---------------------------------------------------------------------------
+
+def test_codec_memo_round_trip_and_invalidation():
+    c = _mk_cluster(0, True)
+    cli = _mk_client(c, 0)
+    cli.put_many({"k0": ("v", None)})
+    ctx = cli.get_many(["k0"])["k0"].context
+    tok = cli.encode_context(ctx)
+    assert cli.encode_context(ctx) == tok          # encode memo hit
+    assert cli.decode_context(tok) is ctx          # primed decode hit
+    assert cli.codec_hits == 2
+    before = cli.codec_misses
+    cli.put_many({"k0": ("w", tok)})               # put invalidates
+    assert cli.codec_info()["cached"] == 0
+    cli.decode_context(tok)
+    assert cli.codec_misses == before + 1          # cold again after put
+
+    # decode-direction priming: from_bytes result is re-encoded for free
+    tok2 = cli.encode_context(cli.decode_context(tok))
+    assert tok2 == tok
+
+
+def test_codec_memo_on_scheduled_path():
+    """submit_put thaws byte tokens through the memo and invalidates at
+    submission, exactly like the synchronous path."""
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0")
+    cli = sch.session("s0", read_repair=True)
+    op = cli.submit_put({"k0": ("v", None)})
+    sch.flush()
+    op.result()
+    g = cli.submit_get(["k0"])
+    sch.flush()
+    tok = cli.encode_context(g.result()["k0"].context)
+    misses = cli.codec_misses
+    p = cli.submit_put({"k0": ("w", tok)})         # thaw = memo hit
+    assert cli.codec_hits >= 1
+    assert cli.codec_info()["cached"] == 0         # invalidated at submit
+    sch.flush()
+    p.result()
+    assert cli.codec_misses == misses
+
+
+# ---------------------------------------------------------------------------
+# Plane-invocation accounting (the ≥5x claim's substrate).
+# ---------------------------------------------------------------------------
+
+def test_plane_invocation_ratio_on_disjoint_keys():
+    """32 sessions × (get+put) on distinct keys: sequential pays one
+    plane invocation per op; one flush pays 1 get sweep + ≤|nodes|
+    coordinator groups — ≥5x fewer."""
+    cs = _mk_cluster(9, True)
+    cli = _mk_client(cs, 0)
+    for i in range(32):
+        cli.get_many([f"d{i}"])
+        cli.put_many({f"d{i}": ("v", None)})
+    seq_planes = cs.plane_invocations
+    assert seq_planes == 64
+
+    cc = _mk_cluster(9, True)
+    sch = OpScheduler(cc, via="n0", max_batch=128)
+    sessions = [sch.session(f"s{i}", read_repair=True) for i in range(32)]
+    gets = [s.submit_get([f"d{i}"]) for i, s in enumerate(sessions)]
+    sch.flush()
+    for i, s in enumerate(sessions):
+        s.submit_put({f"d{i}": ("v", None)})
+    sch.flush()
+    assert all(op.done for op in gets)
+    coal_planes = cc.plane_invocations
+    assert coal_planes * 5 <= seq_planes
+    assert sch.stats()["plane_calls"] <= coal_planes
+
+
+def test_scheduler_stats_shape():
+    c = _mk_cluster(0, True)
+    sch = OpScheduler(c, via="n0", max_batch=4)
+    for i in range(5):
+        sch.submit_get([f"k{i % 3}"])
+    sch.flush()
+    st = sch.stats()
+    assert st["ops_submitted"] == 5
+    assert st["ops_ok"] == 5 and st["ops_failed"] == 0
+    assert st["flushes"] == 2 and st["pending"] == 0
+    assert st["largest_flush"] == 4
+    assert st["plane_calls"] == st["get_calls"] + st["put_calls"]
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop engine smoke (full sweeps live in benchmarks/serving_bench).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["coalesced", "direct"])
+def test_engine_smoke(mode):
+    from repro.store import ClosedLoopEngine
+    c = _mk_cluster(4, True)
+    eng = ClosedLoopEngine(c, sessions=10_000, keys=200, zipf_s=0.9,
+                           concurrency=32, think_time=6.0, rmw_time=1.0,
+                           mode=mode, via="n0", seed=4, max_batch=32,
+                           max_delay=2.0)
+    out = eng.run(80)
+    assert out["steps"] == 80
+    assert out["ops"] == 160 and out["ops_failed"] == 0
+    assert out["plane_invocations"] > 0
+    assert out["codec"]["hits"] > 0
+    if mode == "coalesced":
+        assert out["scheduler"]["pending"] == 0
+        assert out["p99_latency_ticks"] <= 2.0 + 1e-9
+    else:
+        assert out["p99_latency_ticks"] == 0.0
+
+
+def test_engine_coalescing_uses_fewer_planes():
+    """Same seed, same workload: coalesced mode needs ≥3x fewer plane
+    invocations even at smoke scale (the full-scale bench shows ≥5x)."""
+    from repro.store import ClosedLoopEngine
+    planes = {}
+    for mode in ("direct", "coalesced"):
+        c = _mk_cluster(6, True)
+        eng = ClosedLoopEngine(c, sessions=10_000, keys=500, zipf_s=0.9,
+                               concurrency=128, think_time=8.0,
+                               rmw_time=1.0, mode=mode, via="n0", seed=6,
+                               max_batch=128, max_delay=2.0)
+        out = eng.run(200)
+        assert out["ops_failed"] == 0
+        planes[mode] = out["plane_invocations"]
+    assert planes["coalesced"] * 3 <= planes["direct"]
+
+
+# ---------------------------------------------------------------------------
+# Churn-machinery phase: the scheduler under membership/fault churn.
+# ---------------------------------------------------------------------------
+#
+# Reuses the churn suite's op vocabulary, fuzzer and convergence asserts,
+# splicing an OpScheduler between the client ops and the cluster: gets
+# record contexts via completion callbacks, puts carry whatever token the
+# (node, key) slot holds at submission.  Conformance here is
+# packed-vs-object backend agreement with flush timers riding the same
+# simulated clock as gossip, partitions and joins (coalesced-vs-
+# sequential equality under churn is ill-posed: admission probes sample
+# topology at flush time, not submit time).
+
+def _run_schedule_scheduled(seed, ops, packed, shards=1):
+    net = SimNetwork(seed=seed)
+    c = KVCluster(churn.BASE_NODES, DVV_MECHANISM, packed=packed,
+                  network=net, seed=seed, shards=shards)
+    driver = GossipDriver(c, period=6.0, seed=seed)
+    sch = OpScheduler(c, via="n0", max_batch=8, max_delay=3.0)
+    contexts = {}
+    next_id = len(churn.BASE_NODES)
+
+    def record(node, key):
+        def cb(op):
+            if op.error is None:
+                contexts[(node, key)] = op.result()[key].context
+        return cb
+
+    for t, op in enumerate(ops):
+        kind = op[0]
+        nodes = list(c.nodes)
+        if kind == "put":
+            _, ki, ni, use_ctx = op
+            node = nodes[ni % len(nodes)]
+            key = churn.KEYS[ki % len(churn.KEYS)]
+            ctx = contexts.get((node, key)) if use_ctx else None
+            sch.submit_put({key: (f"v{t}", ctx)}, client_id=f"c{ni % 4}")
+        elif kind == "get":
+            _, ki, ni = op
+            node = nodes[ni % len(nodes)]
+            key = churn.KEYS[ki % len(churn.KEYS)]
+            sch.submit_get([key]).on_done(record(node, key))
+        elif kind == "partition":
+            _, p = op
+            g1 = {n for i, n in enumerate(nodes) if (i + p) % 2}
+            g2 = set(nodes) - g1
+            if g1 and g2:
+                net.partition(g1, g2)
+        elif kind == "heal":
+            net.heal()
+        elif kind == "fail":
+            _, ni = op
+            node = nodes[ni % len(nodes)]
+            if len(net.down) < len(nodes) - 1:
+                net.fail_node(node)
+        elif kind == "recover":
+            _, ni = op
+            net.recover_node(nodes[ni % len(nodes)])
+        elif kind == "add":
+            if len(c.nodes) < churn.MAX_NODES:
+                c.add_node(f"n{next_id}")
+                next_id += 1
+        elif kind == "remove":
+            _, ni = op
+            node = nodes[ni % len(nodes)]
+            # never remove the scheduler's proxy (a removed via is a
+            # config error, not a fault the serving plane models)
+            if len(c.nodes) > 2 and node != "n0":
+                c.remove_node(node)
+        elif kind == "advance":
+            _, dt = op
+            driver.run_for(float(dt))   # flush timers fire inside
+        elif kind == "deliver":
+            c.deliver_replication()
+        else:                            # pragma: no cover
+            raise AssertionError(op)
+    sch.flush()                          # drain stragglers
+    net.heal()
+    for n in list(net.down):
+        net.recover_node(n)
+    c.deliver_replication()
+    driver.run_for(60.0 * len(c.nodes))
+    for _ in range(len(c.nodes) + 1):
+        c.delta_antientropy_round()
+    return c
+
+
+def _scheduled_conformance(seed, ops, tag, shards=1):
+    cp = _run_schedule_scheduled(seed, ops, packed=True, shards=shards)
+    co = _run_schedule_scheduled(seed, ops, packed=False, shards=shards)
+    churn._assert_replicas_agree(cp, ("packed", tag))
+    churn._assert_replicas_agree(co, ("object", tag))
+    churn._assert_backends_agree(cp, co, tag)
+
+
+@pytest.mark.parametrize("seed", [0, 13])
+def test_scheduled_churn_conformance_pinned(seed):
+    _scheduled_conformance(seed, churn._random_ops(seed, 35), seed)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    # slow + serving only: the test-serving lane is this phase's home
+    # (mirrors the churn suite's marker discipline).
+    @pytest.mark.slow
+    @settings(max_examples=75, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20),
+           st.lists(churn._op, min_size=4, max_size=24),
+           st.sampled_from([1, 4]))
+    def test_scheduled_churn_conformance_fuzzed(seed, ops, shards):
+        _scheduled_conformance(seed, list(ops), (seed, len(ops), shards),
+                               shards=shards)
+
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20),
+           st.sampled_from([2, 4, 64]))
+    def test_coalesced_conformance_fuzzed(seed, max_batch):
+        """Fuzzed coalesced-vs-sequential equality on healthy clusters,
+        across flush-composition extremes (size-dominated to one-shot)."""
+        sched = _schedule(seed, rounds=6, sessions=5)
+        cs = _mk_cluster(seed, True)
+        seq = _run_sequential(cs, sched, 5)
+        cc = _mk_cluster(seed, True)
+        coal, _ = _run_coalesced(cc, sched, 5, max_batch=max_batch)
+        assert coal == seq
+        _assert_state_identical(cc, cs, (seed, max_batch))
+except ImportError:     # pinned phases above still run
+    pass
