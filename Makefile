@@ -7,14 +7,17 @@
 # `make test-read` runs the batched read-plane + read-repair suite
 # (including its slow kernel/fuzz phases); `test-serving` runs the
 # coalescing serving-plane suite (conformance + the slow scheduled-churn
-# phase).
+# phase); `test-geo` runs the geo-replication tier (DC topology, HLC
+# walls, causal snapshot plane, incl. its slow DC-partition fuzz phase).
 # `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
 # looped client calls and writes BENCH_client_api.json; `bench-read`
 # sweeps the one-sweep read plane (keys x divergence, repair on/off) and
 # writes BENCH_read_path.json; `bench-serving` runs the closed-loop
-# coalescing sweep and writes BENCH_serving.json; `lint` is a
+# coalescing sweep and writes BENCH_serving.json; `bench-geo` runs the
+# geo tier sweep (snapshot latency, frontier staleness, WAN bytes) and
+# writes BENCH_geo.json; `lint` is a
 # dependency-free syntax/bytecode pass (the container has no flake8/ruff
 # baked in).
 
@@ -22,8 +25,8 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-all test-property test-churn test-read test-shard \
-	test-serving bench-smoke bench bench-delta bench-client bench-churn \
-	bench-read bench-shard bench-serving lint check
+	test-serving test-geo bench-smoke bench bench-delta bench-client \
+	bench-churn bench-read bench-shard bench-serving bench-geo lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -46,6 +49,9 @@ test-shard:
 test-serving:
 	$(PY) -m pytest -q -m serving
 
+test-geo:
+	$(PY) -m pytest -q -m geo
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
@@ -58,6 +64,8 @@ bench-smoke:
 	          print('\n'.join(read_path_rows((64,), (0.1,), \
 	          json_path=None, reps=1)))"
 	$(PY) -c "from benchmarks.serving_bench import rows; \
+	          print('\n'.join(rows()))"
+	$(PY) -c "from benchmarks.geo_bench import rows; \
 	          print('\n'.join(rows()))"
 
 bench:
@@ -82,6 +90,9 @@ bench-shard:
 
 bench-serving:
 	$(PY) -m benchmarks.serving_bench
+
+bench-geo:
+	$(PY) -m benchmarks.geo_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

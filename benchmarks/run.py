@@ -13,10 +13,10 @@ bounded.  Sections:
   scale_*          — metadata growth along clients/replicas/updates
                      (the §6/§7 scalability claim)
   dvv_leq_* etc.   — kernel-layer throughput (TPU-adaptation layer)
-  delta_/client_/churn_/read_/shard_/serving_*
+  delta_/client_/churn_/read_/shard_/serving_/geo_*
                    — the store-plane suites (anti-entropy, batched
                      client API, churn, read path, sharding, coalescing
-                     serving plane)
+                     serving plane, geo-replication tier)
 
 Exits non-zero if any mechanism deviates from the paper's qualitative
 outcome (``paper_figures.check_paper_claims``).
@@ -52,8 +52,9 @@ def _merge_smoke(json_path: str, rows: list) -> None:
 
 
 def main() -> None:
-    from . import churn_bench, client_bench, delta_bench, kernel_bench, \
-        paper_figures, read_bench, scalability, serving_bench, shard_bench
+    from . import churn_bench, client_bench, delta_bench, geo_bench, \
+        kernel_bench, paper_figures, read_bench, scalability, \
+        serving_bench, shard_bench
 
     # (module, BENCH json its full sweep owns — None: prints rows only)
     targets = [
@@ -66,6 +67,7 @@ def main() -> None:
         (read_bench, "BENCH_read_path.json"),
         (shard_bench, "BENCH_sharding.json"),
         (serving_bench, "BENCH_serving.json"),
+        (geo_bench, "BENCH_geo.json"),
     ]
 
     rows = []

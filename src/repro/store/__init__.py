@@ -3,7 +3,8 @@ from .bulk import DeltaSyncStats, delta_antientropy
 from .client import KVClient
 from .cluster import GetResult, KVCluster, PutAck
 from .context import CausalContext, EMPTY_CONTEXT
-from .gossip import GossipDriver, cluster_converged
+from .geo import GeoPlane
+from .gossip import GossipDriver, WanShipper, cluster_converged
 from .network import SimNetwork, Unavailable
 from .packed import MergedRead, PackedPayload, PackedVersionStore, \
     StoreDigest, concat_payloads, key_bucket, quorum_merge_many, \
@@ -11,13 +12,15 @@ from .packed import MergedRead, PackedPayload, PackedVersionStore, \
 from .replica import ReplicaNode
 from .serving import ClosedLoopEngine, OpScheduler, PendingOp
 from .sharding import HashRing, key_hash64, shard_of_key
-from .version import Version, clocks_of, sync_versions, values_of
+from .version import HybridClock, Version, clocks_of, hlc_decode, \
+    hlc_encode, sync_versions, values_of
 
 __all__ = [
     "KVCluster", "KVClient", "GetResult", "PutAck",
     "CausalContext", "EMPTY_CONTEXT",
     "SimNetwork", "Unavailable",
-    "GossipDriver", "cluster_converged",
+    "GossipDriver", "WanShipper", "cluster_converged",
+    "GeoPlane", "HybridClock", "hlc_encode", "hlc_decode",
     "OpScheduler", "PendingOp", "ClosedLoopEngine",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",
     "PackedVersionStore", "PackedPayload", "MergedRead",

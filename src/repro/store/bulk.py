@@ -290,7 +290,7 @@ def bulk_receive_antientropy(node: ReplicaNode,
         for k, versions in new_sets.items():
             if versions != node.versions(k):
                 changed += 1
-            backend.store[k] = versions
+            backend.replace_key(k, versions)
         return changed
     return backend.receive_antientropy(payload)
 

@@ -142,6 +142,24 @@ class KVClient:
             client_id=self.client_id, client_counter=self.counter,
             coordinator=coordinator, quorum=quorum or self.write_quorum)
 
+    # -- causal snapshot reads (geo tier) ------------------------------------
+
+    def snapshot_get(self, key: str, *, via: Optional[str] = None
+                     ) -> GetResult:
+        """Causally consistent, possibly stale read served from the proxy's
+        datacenter with zero WAN round trips (geo clusters only).  The
+        returned token carries the snapshot's HLC watermark, so a PUT with
+        it mints a wall above everything the snapshot saw — session
+        causality holds across the two read planes."""
+        return self.cluster.snapshot_get(key, via=via or self.via)
+
+    def snapshot_get_many(self, keys: Sequence[str],
+                          *, via: Optional[str] = None
+                          ) -> Dict[str, GetResult]:
+        """Batched causal snapshot read — one Global Stable Frontier for
+        the whole batch (see ``KVCluster.snapshot_get_many``)."""
+        return self.cluster.snapshot_get_many(keys, via=via or self.via)
+
     # -- batched ------------------------------------------------------------
 
     def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
@@ -193,6 +211,14 @@ class KVClient:
             keys, quorum=quorum or self.read_quorum,
             repair=self.read_repair if repair is None else repair,
             client_id=self.client_id, session=self.client_id)
+
+    def submit_snapshot_get(self, keys: Sequence[str]):
+        """Enqueue a causal snapshot GET → ``PendingOp`` whose result is
+        the same ``{key: GetResult}`` dict ``snapshot_get_many`` returns.
+        All snapshot ops admitted into one flush share a single frontier
+        resolution and one plane invocation."""
+        return self._require_scheduler().submit_snapshot_get(
+            keys, client_id=self.client_id, session=self.client_id)
 
     def submit_put(self, items: Mapping[str, Tuple[Any, Any]], *,
                    quorum: Optional[int] = None):

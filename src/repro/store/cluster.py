@@ -33,7 +33,7 @@ from .packed import MergedRead, NO_DOT, PackedPayload, quorum_merge_key, \
 from .replica import ReplicaNode
 from .sharding import DEFAULT_PLACEMENT_SLICES, DEFAULT_VNODES, HashRing, \
     key_hash64, moved_shards, owned_shards, shard_of_key
-from .version import Version, clocks_of, sync_versions
+from .version import HybridClock, Version, clocks_of, sync_versions
 
 #: Default per-push range budget when gossip fanout sampling is active
 #: (`delta_antientropy_round(fanout=...)`); caps a single round's payload
@@ -75,28 +75,35 @@ class PutAck:
 
 def _merged_result(values: Sequence[Any], walls: Sequence[float],
                    ckeys: Sequence[str],
-                   entries: Tuple[Tuple[str, int], ...]) -> GetResult:
+                   entries: Tuple[Tuple[str, int], ...],
+                   hlc: float = 0.0) -> GetResult:
     """``GetResult`` from merged packed survivor rows.  Each value's repr
     is computed once and shared by the sort key and the resolution tuple
-    (it used to be computed twice per sibling on the hot read path)."""
+    (it used to be computed twice per sibling on the hot read path).
+    ``hlc`` is the geo tier's read watermark carried on the token (0.0 —
+    the non-geo case — keeps the token byte-identical)."""
     reprs = [repr(v) for v in values]
     order = sorted(range(len(values)),
                    key=lambda i: (reprs[i], walls[i], ckeys[i]))
     return GetResult(
         values=tuple(values[i] for i in order),
-        context=CausalContext(entries=entries),
+        context=CausalContext(entries=entries, hlc=hlc),
         siblings=len(values),
         resolution=tuple((walls[i], ckeys[i], reprs[i]) for i in order))
 
 
-def _object_result(acc: FrozenSet[Version]) -> GetResult:
+def _object_result(acc: FrozenSet[Version], hlc: float = 0.0) -> GetResult:
     """``GetResult`` from an object-backend merged version set (same
-    repr-once discipline as the packed twin)."""
+    repr-once discipline and ``hlc`` watermark as the packed twin)."""
     keyed = [(v, repr(v.clock), repr(v.value)) for v in acc]
     keyed.sort(key=lambda t: (t[2], t[0].wall, t[1]))
+    ctx = CausalContext.from_clocks(clocks_of(acc))
+    if hlc:
+        ctx = CausalContext(entries=ctx.entries, residue=ctx.residue,
+                            hlc=hlc)
     return GetResult(
         values=tuple(t[0].value for t in keyed),
-        context=CausalContext.from_clocks(clocks_of(acc)),
+        context=ctx,
         siblings=len(acc),
         resolution=tuple((t[0].wall, t[1], t[2]) for t in keyed))
 
@@ -149,7 +156,9 @@ class KVCluster:
                  network: Optional[SimNetwork] = None, seed: int = 0,
                  packed: Optional[bool] = None,
                  delta_range_budget: int = DELTA_RANGE_BUDGET,
-                 shards: int = 1, vnodes: int = DEFAULT_VNODES):
+                 shards: int = 1, vnodes: int = DEFAULT_VNODES,
+                 datacenters: Optional[Mapping[str, Sequence[str]]] = None,
+                 wan_period: float = 25.0):
         if not node_ids:
             raise ValueError("need at least one node")
         if shards < 1 or shards & (shards - 1):
@@ -172,14 +181,34 @@ class KVCluster:
         self.nodes: Dict[str, ReplicaNode] = {
             n: ReplicaNode(n, mechanism, packed=packed, shards=shards)
             for n in node_ids}
-        self.replication = replication or len(node_ids)
         self.read_quorum = read_quorum
         self.write_quorum = write_quorum
         self.network = network or SimNetwork(seed=seed)
         self.clock_time = 0.0
         self.delta_range_budget = delta_range_budget
         self.seed = seed
-        self._ring = HashRing(node_ids, vnodes=vnodes)
+        # Per-node hybrid logical clocks mint every ``Version.wall`` (the
+        # geo tier's skew robustness; in a non-anomalous run the minted
+        # values equal the raw shared clock, so single-DC behaviour is
+        # unchanged down to the byte).
+        self.hlc: Dict[str, HybridClock] = {n: HybridClock()
+                                            for n in node_ids}
+        # Geo tier (DESIGN.md §12): ``datacenters`` maps DC name → its
+        # equal-sized node list.  The ring is then built over the FIRST
+        # DC's nodes and placement rows are mirror-expanded, writes scope
+        # their quorums to the coordinator's DC and ship cross-DC
+        # asynchronously, and the snapshot read plane comes alive.
+        self.geo = None
+        if datacenters is not None:
+            from .geo import GeoPlane
+            self.geo = GeoPlane(self, datacenters, wan_period=wan_period)
+        # replication counts nodes per DC in geo mode (mirror rows multiply
+        # it by the DC count), defaulting to a full local DC.
+        self.replication = replication or (
+            len(node_ids) if self.geo is None else self.geo.dc_size)
+        ring_ids = node_ids if self.geo is None \
+            else self.geo.canonical_nodes
+        self._ring = HashRing(ring_ids, vnodes=vnodes)
         self._rebuild_placement()
         # Seeded round-robin gossip schedule (delta_antientropy_round /
         # gossip_tick): each node's start offset is a pure function of
@@ -212,11 +241,15 @@ class KVCluster:
         empty version sets.  ``replication`` is a cluster parameter and
         does not change on join.
         """
+        if self.geo is not None:
+            raise ValueError("membership changes are not supported on a "
+                             "geo cluster (mirror placement is static)")
         if node_id in self.nodes:
             raise ValueError(f"node {node_id!r} already in cluster")
         self.nodes[node_id] = ReplicaNode(node_id, self.mechanism,
                                           packed=self._packed,
                                           shards=self.shards)
+        self.hlc[node_id] = HybridClock()
         self._ring.add(node_id)
         self._rebuild_placement()
         # a join is a topology change too: listeners (the gossip driver)
@@ -244,6 +277,9 @@ class KVCluster:
         down node naturally hands off nothing.  Surviving nodes' gossip
         schedules are untouched (offsets are per-node functions of the
         seed), so removal never reshuffles peer sampling determinism."""
+        if self.geo is not None:
+            raise ValueError("membership changes are not supported on a "
+                             "geo cluster (mirror placement is static)")
         if node_id not in self.nodes:
             raise KeyError(f"node {node_id!r} not in cluster")
         if len(self.nodes) == 1:
@@ -312,9 +348,16 @@ class KVCluster:
     def _rebuild_placement(self) -> None:
         """Recompute the O(slices) placement table from the ring — the only
         placement state there is (bounded by the slice count, never by the
-        key universe; per-key lookup is then one hash + one index)."""
-        self._placement = self._ring.placement_table(
-            self._slices, self.replication)
+        key universe; per-key lookup is then one hash + one index).  Geo
+        mode expands each canonical (first-DC) row to its mirror rows:
+        slot i of every DC owns slot i of the first DC's key ranges, so
+        every DC holds a full copy and WAN delta rounds between mirror
+        pairs are digest-comparable."""
+        table = self._ring.placement_table(self._slices, self.replication)
+        if self.geo is not None:
+            table = [tuple(m for n in row for m in self.geo.mirrors(n))
+                     for row in table]
+        self._placement = table
         self._owned: Dict[str, frozenset] = (
             {n: owned_shards(self._placement, n) for n in self.nodes}
             if self.shards > 1 else {})
@@ -355,8 +398,15 @@ class KVCluster:
         if not candidates:
             raise Unavailable(f"no reachable coordinator for {key!r}")
         # Prefer coordinating at the proxy itself when it is a replica
-        # (local coordination preserves read-your-writes via one node).
-        candidates.sort(key=lambda r: (r != proxy,))
+        # (local coordination preserves read-your-writes via one node);
+        # geo mode then prefers the proxy's own DC — commit latency stays
+        # LAN-local, the geo tier's write-path promise.
+        if self.geo is not None:
+            pdc = self.geo.dc_of.get(proxy)
+            candidates.sort(
+                key=lambda r: (r != proxy, self.geo.dc_of[r] != pdc))
+        else:
+            candidates.sort(key=lambda r: (r != proxy,))
         return candidates[0]
 
     # -- admission probes (non-raising; the op-scheduler's per-op triage) -----
@@ -389,6 +439,41 @@ class KVCluster:
     def plane_invocations(self) -> int:
         return self.plane_reads + self.plane_writes
 
+    # -- wall minting (hybrid logical clocks) ---------------------------------
+    def _mint_wall(self, coordinator: str, ctx: CausalContext,
+                   wall_time: Optional[float]) -> float:
+        """Mint a write's wall at the coordinator's hybrid clock.
+
+        In a non-anomalous run ``mint(clock_time)`` returns exactly
+        ``clock_time`` (the shared clock strictly increases, so the
+        physical branch always wins) — pre-geo behaviour to the byte; a
+        stalled or backwards-stepping clock falls into the logical
+        tiebreak and walls stay strictly increasing per coordinator.  Geo
+        mode first folds in the token's read watermark and the
+        coordinator's own wall-column max, making causal order imply wall
+        order (what snapshot consistency rests on).  An explicit
+        ``wall_time`` bypasses minting (a test hook; geo snapshot
+        guarantees assume coordinator-minted walls)."""
+        h = self.hlc[coordinator]
+        if wall_time is not None:
+            if self.geo is not None:
+                h.observe(wall_time)
+            return wall_time
+        if self.geo is not None:
+            if ctx.hlc:
+                h.observe(ctx.hlc)
+            h.observe(self.nodes[coordinator].max_wall)
+        return h.mint(self.clock_time)
+
+    def _read_watermark(self, walls: Iterable[float]) -> float:
+        """HLC watermark a read stamps on its context token (geo only —
+        non-geo tokens stay byte-identical to pre-geo ones): the max wall
+        among returned versions, so a dependent write minted anywhere
+        lands strictly above everything this read saw."""
+        if self.geo is None:
+            return 0.0
+        return max((float(w) for w in walls), default=0.0)
+
     # -- client operations -------------------------------------------------------
     def _object_read(self, key: str, chosen: Sequence[ReplicaNode]
                      ) -> FrozenSet[Version]:
@@ -418,8 +503,11 @@ class KVCluster:
             # zero object-clock decodes.
             values, walls, ckeys, entries = quorum_merge_key(
                 [n.store_for(key) for n in chosen], key)
-            return _merged_result(values, walls, ckeys, entries)
-        return _object_result(self._object_read(key, chosen))
+            return _merged_result(values, walls, ckeys, entries,
+                                  hlc=self._read_watermark(walls))
+        acc = self._object_read(key, chosen)
+        return _object_result(
+            acc, hlc=self._read_watermark(v.wall for v in acc))
 
     def get_many(self, keys: Sequence[str], *, via: Optional[str] = None,
                  quorum: Optional[int] = None, repair: bool = False,
@@ -494,7 +582,8 @@ class KVCluster:
                 packed_keys, sweep_fn=sweep_fn, track_stale=repair)
             for k, m in merged.items():
                 results[k] = _merged_result(m.values, m.walls, m.clock_keys,
-                                            m.entries)
+                                            m.entries,
+                                            hlc=self._read_watermark(m.walls))
                 if repair:
                     for j in m.stale:
                         packed_repairs.setdefault(
@@ -504,7 +593,8 @@ class KVCluster:
                 continue
             self.plane_reads += 1
             acc = self._object_read(k, [self.nodes[r] for r in ids])
-            results[k] = _object_result(acc)
+            results[k] = _object_result(
+                acc, hlc=self._read_watermark(v.wall for v in acc))
             if repair:
                 for r in ids:
                     if self.nodes[r].versions(k) != acc:
@@ -526,6 +616,70 @@ class KVCluster:
                     self.network.send(proxy, dst, ("store", payload))
         return {k: results[k] for k in chosen}
 
+    # -- causal snapshot reads (geo tier, DESIGN.md §12) --------------------
+    def probe_snapshot(self, keys: Sequence[str],
+                       *, via: Optional[str] = None) -> Optional[str]:
+        """Admission probe for a snapshot batch: the failure reason a
+        ``snapshot_get_many`` with these keys would raise, or ``None`` if
+        it would be served.  The scheduler uses this to admit/defer
+        snapshot ops without tripping exceptions."""
+        if self.geo is None:
+            return "snapshot reads require a geo cluster (datacenters=...)"
+        proxy = via or next(iter(self.nodes))
+        for key in keys:
+            reason = self.geo.check_snapshot(proxy, key)
+            if reason is not None:
+                return reason
+        return None
+
+    def snapshot_get(self, key: str, *, via: Optional[str] = None
+                     ) -> GetResult:
+        """Causally consistent, possibly stale read served entirely from
+        the proxy's datacenter — zero WAN round trips (single-key form of
+        ``snapshot_get_many``)."""
+        return self.snapshot_get_many([key], via=via)[key]
+
+    def snapshot_get_many(self, keys: Sequence[str],
+                          *, via: Optional[str] = None
+                          ) -> Dict[str, GetResult]:
+        """Batched causal snapshot read at the proxy's DC (DESIGN.md §12).
+
+        The batch is served at ONE Global Stable Frontier F — the wall
+        below which every version is provably held by at least one local
+        member (the min-fold over member HLCs, queued replication
+        messages, WAN-shipping backlogs and dropped-send backlogs).  Per
+        key, the *union* of all local replicas' live versions and their
+        retained stable shadows is filtered to wall ≤ F and sibling-merged
+        — so two keys written causally (read k1 → put k2) can never appear
+        inverted: the later write's wall is strictly larger, and any
+        version ≤ F is guaranteed present locally.  No WAN message is sent
+        or awaited; results may lag remote commits by the frontier lag.
+        Admission is atomic (any key failing the local-coverage check
+        raises before any merge), mirroring ``get_many``.
+        """
+        if self.geo is None:
+            raise RuntimeError(
+                "snapshot reads require a geo cluster (datacenters=...)")
+        proxy = via or next(iter(self.nodes))
+        failures = []
+        for key in keys:
+            reason = self.geo.check_snapshot(proxy, key)
+            if reason is not None:
+                failures.append((key, reason))
+        if failures:
+            raise Unavailable(
+                f"snapshot unavailable for {len(failures)}/{len(keys)} "
+                f"keys via {proxy} (e.g. {failures[:2]})")
+        self.plane_reads += 1
+        dc = self.geo.dc_of[proxy]
+        frontier = self.geo.stable_frontier(dc)
+        out: Dict[str, GetResult] = {}
+        for key in keys:
+            acc = self.geo.snapshot_versions(dc, key, frontier)
+            out[key] = _object_result(
+                acc, hlc=max((v.wall for v in acc), default=0.0))
+        return out
+
     def put(self, key: str, value: Any, context: Any = None,
             *, via: Optional[str] = None, client_id: str = "?",
             client_counter: int = 0, wall_time: Optional[float] = None,
@@ -536,10 +690,10 @@ class KVCluster:
             raise Unavailable(f"proxy {proxy} is down")
         quorum = quorum or self.write_quorum
         self.clock_time += 1.0
-        wall = self.clock_time if wall_time is None else wall_time
 
         ctx = CausalContext.coerce(context)
         coordinator = self._pick_coordinator(proxy, key, coordinator)
+        wall = self._mint_wall(coordinator, ctx, wall_time)
         self.plane_writes += 1
         node = self.nodes[coordinator]
         version = node.coordinate_update(
@@ -548,15 +702,26 @@ class KVCluster:
 
         # replicate S_C' to the other replicas (paper step 4): async
         # messages carrying the wire payload (packed: int32 arrays, no
-        # object clocks on the control plane either)
+        # object clocks on the control plane either).  Geo mode scopes this
+        # synchronous fan-out (and the write quorum) to the coordinator's
+        # own datacenter; mirrors in other DCs get the payload later via
+        # the WAN shipper's digest-diffed delta rounds.
+        geo = self.geo
+        cdc = geo.dc_of[coordinator] if geo is not None else None
         payload = node.antientropy_payload([key])
         acked = [coordinator]
         for r in self.replicas_for(key):
             if r == coordinator:
                 continue
+            if geo is not None and geo.dc_of[r] != cdc:
+                continue
             sent = self.network.send(coordinator, r, ("store", payload))
             if sent:
                 acked.append(r)
+            elif geo is not None:
+                geo.note_send_failed(coordinator, r, wall)
+        if geo is not None:
+            geo.on_commit(cdc, (wall,))
         if len(acked) < quorum:
             # The write is still durable at the coordinator (always-writable
             # store) but the caller asked for more replicas than reachable.
@@ -608,11 +773,13 @@ class KVCluster:
         if use_kernel:
             from ..kernels.dvv_ops import dvv_sync_mask_bucketed
             mask_fn = dvv_sync_mask_bucketed
+        geo = self.geo
         for key in items:
             self.clock_time += 1.0
-            walls[key] = self.clock_time
+            walls[key] = self._mint_wall(coord_of[key], ctxs[key], None)
         for coord, keys in groups.items():
             self.plane_writes += 1
+            cdc = geo.dc_of[coord] if geo is not None else None
             node = self.nodes[coord]
             batch = [(k, ctxs[k], items[k][0], walls[k]) for k in keys]
             versions = node.coordinate_updates(
@@ -622,12 +789,16 @@ class KVCluster:
                 minted[k] = v
                 acked[k] = [coord]
             # One replication payload per destination: all of this
-            # coordinator's keys that destination replicates.
+            # coordinator's keys that destination replicates.  Geo mode
+            # fans out local-DC only (mirrors ride the WAN shipper).
             dst_keys: Dict[str, List[str]] = {}
             for k in keys:
                 for r in self.replicas_for(k):
-                    if r != coord:
-                        dst_keys.setdefault(r, []).append(k)
+                    if r == coord:
+                        continue
+                    if geo is not None and geo.dc_of[r] != cdc:
+                        continue
+                    dst_keys.setdefault(r, []).append(k)
             # Destinations replicating the same key set share one payload
             # object (receivers never mutate payloads; single-key put
             # already relies on this).
@@ -641,6 +812,11 @@ class KVCluster:
                 if self.network.send(coord, dst, ("store", payload)):
                     for k in ks:
                         acked[k].append(dst)
+                elif geo is not None:
+                    for k in ks:
+                        geo.note_send_failed(coord, dst, walls[k])
+            if geo is not None:
+                geo.on_commit(cdc, tuple(walls[k] for k in keys))
         failed = [k for k in items if len(acked[k]) < quorum]
         if failed:
             raise Unavailable(
@@ -660,6 +836,8 @@ class KVCluster:
             kind, payload = msg.payload
             assert kind == "store"
             self.nodes[msg.dst].receive_antientropy(payload)
+            if self.geo is not None:
+                self.geo.note_receive(msg.dst, msg.payload)
         return self.network.deliver(handler, until=until,
                                     max_messages=max_messages)
 
@@ -670,6 +848,8 @@ class KVCluster:
             raise Unavailable(f"{src} -> {dst} unreachable")
         payload = self.nodes[src].antientropy_payload(keys)
         self.nodes[dst].receive_antientropy(payload)
+        if self.geo is not None:
+            self.geo.note_delta_round(src, dst)
 
     def antientropy_round(self) -> None:
         """One full push round between all reachable pairs."""
@@ -691,10 +871,13 @@ class KVCluster:
         ``only_shards`` restricts it — the rebalance plane."""
         if not self.network.reachable(src, dst):
             raise Unavailable(f"{src} -> {dst} unreachable")
-        return _delta_antientropy(self.nodes[src], self.nodes[dst],
-                                  use_kernel=use_kernel,
-                                  max_ranges=max_ranges,
-                                  only_shards=only_shards)
+        stats = _delta_antientropy(self.nodes[src], self.nodes[dst],
+                                   use_kernel=use_kernel,
+                                   max_ranges=max_ranges,
+                                   only_shards=only_shards)
+        if self.geo is not None:
+            self.geo.note_delta_round(src, dst)
+        return stats
 
     def _gossip_base(self, node: str) -> int:
         """A node's gossip start offset: a pure function of (seed, node id),
@@ -710,8 +893,14 @@ class KVCluster:
         """The ``k`` peers ``node`` pushes to at rotation ``step``, sampled
         from *current* membership — departed nodes drop out of the rotation
         naturally (they are simply absent), reachability is checked by the
-        caller.  Repeated steps cycle every node through all live peers."""
-        ids = list(self.nodes)
+        caller.  Repeated steps cycle every node through all live peers.
+        In geo mode gossip stays LAN-scoped — a node rotates only through
+        its own datacenter; cross-DC convergence is the WAN shipper's job
+        (digest-diffed delta rounds per link, not N² WAN chatter)."""
+        if self.geo is not None and node in self.geo.dc_of:
+            ids = list(self.geo.dcs[self.geo.dc_of[node]])
+        else:
+            ids = list(self.nodes)
         n = len(ids)
         if node not in self.nodes or n < 2:
             return []

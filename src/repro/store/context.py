@@ -84,6 +84,13 @@ class CausalContext:
 
     entries: Tuple[Tuple[str, int], ...] = ()   # compacted ceiling ⌈S⌉
     residue: Tuple[Any, ...] = ()               # non-DVV clocks, verbatim
+    # HLC watermark of the read this token came from (geo tier, DESIGN.md
+    # §12): the max encoded wall among returned versions.  Coordinators
+    # fold it into their hybrid clock before minting, so a write causally
+    # after a read always carries a larger wall than everything the read
+    # saw.  0.0 (the non-geo default) encodes to the exact pre-geo byte
+    # layout.
+    hlc: float = 0.0
 
     # -- construction ------------------------------------------------------
 
@@ -167,15 +174,20 @@ class CausalContext:
 
     def to_bytes(self) -> bytes:
         """Encode for the wire.  O(R) for DVV contexts: a fixed header,
-        then one length-prefixed id + uint64 per replica entry.  Residues
-        (non-DVV mechanisms only) append a pickle blob."""
-        parts = [_MAGIC, struct.pack("<BH", 1 if self.residue else 0,
-                                     len(self.entries))]
+        then one length-prefixed id + uint64 per replica entry.  The header
+        byte is a flag bitfield — bit 0: residue pickle appended, bit 1:
+        an 8-byte HLC watermark follows the entries.  A zero watermark is
+        simply not encoded, so pre-geo tokens are byte-identical.  Residues
+        (non-DVV mechanisms only) append a pickle blob last."""
+        flags = (1 if self.residue else 0) | (2 if self.hlc else 0)
+        parts = [_MAGIC, struct.pack("<BH", flags, len(self.entries))]
         for r, n in self.entries:
             rid = r.encode()
             parts.append(struct.pack("<H", len(rid)))
             parts.append(rid)
             parts.append(struct.pack("<Q", n))
+        if self.hlc:
+            parts.append(struct.pack("<d", self.hlc))
         if self.residue:
             parts.append(pickle.dumps(self.residue))
         return b"".join(parts)
@@ -191,9 +203,10 @@ class CausalContext:
             raise ValueError("not a CausalContext token (bad magic)")
         if len(data) < 7:
             raise ValueError("truncated CausalContext token (header)")
-        has_residue, count = struct.unpack_from("<BH", data, 4)
-        if has_residue not in (0, 1):
-            raise ValueError("corrupt CausalContext token (residue flag)")
+        flags, count = struct.unpack_from("<BH", data, 4)
+        if flags & ~3:
+            raise ValueError("corrupt CausalContext token (flags)")
+        has_residue, has_hlc = flags & 1, flags & 2
         off = 7
         entries = []
         for i in range(count):
@@ -214,6 +227,16 @@ class CausalContext:
             (n,) = struct.unpack_from("<Q", data, off)
             off += 8
             entries.append((rid, n))
+        hlc = 0.0
+        if has_hlc:
+            if off + 8 > len(data):
+                raise ValueError(
+                    "truncated CausalContext token (hlc watermark)")
+            (hlc,) = struct.unpack_from("<d", data, off)
+            off += 8
+            if not (hlc > 0.0):     # also rejects NaN, -0.0 and negatives
+                raise ValueError(
+                    "corrupt CausalContext token (hlc watermark)")
         residue: Tuple[Any, ...] = ()
         if has_residue:
             stream = io.BytesIO(data[off:])
@@ -230,12 +253,14 @@ class CausalContext:
                     "corrupt CausalContext token (residue shape)")
         elif off != len(data):
             raise ValueError("corrupt CausalContext token (trailing bytes)")
-        return CausalContext(entries=tuple(entries), residue=residue)
+        return CausalContext(entries=tuple(entries), residue=residue,
+                             hlc=hlc)
 
     def __repr__(self) -> str:
         ent = ",".join(f"{r}:{n}" for r, n in self.entries)
         res = f"+{len(self.residue)}res" if self.residue else ""
-        return f"<ctx {ent or '∅'}{res}>"
+        mark = f"@{self.hlc:g}" if self.hlc else ""
+        return f"<ctx {ent or '∅'}{res}{mark}>"
 
 
 #: The canonical "new session" context (no causal dependencies).

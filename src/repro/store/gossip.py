@@ -337,6 +337,122 @@ class GossipDriver:
                 f"rounds={self.rounds} wire={self.wire_bytes()}B>")
 
 
+@dataclass
+class LinkState:
+    """Per-WAN-link shipping cadence (all simulated-time units)."""
+
+    interval: float
+    rng: random.Random
+    timer: Optional[int] = None
+    fire_at: float = 0.0
+    ticks: int = 0
+
+
+class WanShipper:
+    """The geo tier's cross-DC loop: per-WAN-link delta shipping timers on
+    the same SimNetwork heap the LAN ``GossipDriver`` runs on.
+
+    One link = one directed DC pair; a fire runs ``GeoPlane.wan_tick``
+    (digest-diffed mirror slot-pair rounds, O(divergence) on the wire) and
+    adapts like the LAN driver in miniature: ticks that shipped nothing
+    back the link's cadence off multiplicatively, divergent or incomplete
+    ticks snap it to the base period, and topology changes (a healed WAN
+    cut) snap every link so backlogged writes ship at loop speed instead
+    of waiting out a backoff.  Constructed by ``GeoPlane``.
+    """
+
+    def __init__(self, geo, *, period: float = 25.0,
+                 max_period: Optional[float] = None, backoff: float = 1.6,
+                 jitter: float = 0.25, seed: Optional[int] = None,
+                 autostart: bool = True):
+        if period <= 0:
+            raise ValueError("period must be positive")
+        if not 0 <= jitter < 1:
+            raise ValueError("jitter must be in [0, 1)")
+        self.geo = geo
+        self.cluster = geo.cluster
+        self.period = float(period)
+        self.max_period = float(max_period if max_period is not None
+                                else 4.0 * period)
+        self.backoff = backoff
+        self.jitter = jitter
+        self.seed = self.cluster.seed if seed is None else seed
+        self._state: Dict[tuple, LinkState] = {
+            link: LinkState(
+                interval=self.period,
+                rng=random.Random(f"{self.seed}:wan:{link[0]}>{link[1]}"))
+            for link in geo.links()}
+        self._running = False
+        self.ticks = 0
+        if autostart:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> None:
+        self._running = True
+        net = self.cluster.network
+        if self._on_topology not in net.topology_listeners:
+            net.topology_listeners.append(self._on_topology)
+        for link, st in self._state.items():
+            if st.timer is None:
+                self._arm(link)
+
+    def stop(self) -> None:
+        self._running = False
+        net = self.cluster.network
+        if self._on_topology in net.topology_listeners:
+            net.topology_listeners.remove(self._on_topology)
+        for st in self._state.values():
+            if st.timer is not None:
+                net.cancel(st.timer)
+                st.timer = None
+
+    # -- scheduling --------------------------------------------------------
+
+    def _arm(self, link: tuple, interval: Optional[float] = None) -> None:
+        if not self._running:
+            return
+        st = self._state[link]
+        base = st.interval if interval is None else interval
+        delay = base * (1.0 + self.jitter * (2.0 * st.rng.random() - 1.0))
+        st.timer = self.cluster.network.schedule(
+            delay, lambda: self._fire(link))
+        st.fire_at = self.cluster.network.now + delay
+
+    def _on_topology(self) -> None:
+        """A healed link (or any topology shift) may have freed a WAN
+        backlog: snap every link's cadence to the base period."""
+        if not self._running:
+            return
+        horizon = self.period * (1.0 + self.jitter)
+        for link, st in self._state.items():
+            st.interval = self.period
+            if st.timer is not None and \
+                    st.fire_at - self.cluster.network.now > horizon:
+                self.cluster.network.cancel(st.timer)
+                self._arm(link)
+
+    def _fire(self, link: tuple) -> None:
+        st = self._state[link]
+        st.timer = None
+        st.ticks += 1
+        self.ticks += 1
+        # drain due replication first so shipped state reflects the
+        # present, matching the LAN driver's delivery-pump discipline
+        self.cluster.deliver_replication(until=self.cluster.network.now)
+        stats, complete = self.geo.wan_tick(*link)
+        shipped = any(r.buckets_divergent or r.changed for r in stats)
+        if shipped or not complete:
+            st.interval = self.period
+        else:
+            st.interval = min(st.interval * self.backoff, self.max_period)
+        self._arm(link)
+
+    def __repr__(self) -> str:      # pragma: no cover
+        return (f"<WanShipper links={len(self._state)} ticks={self.ticks}>")
+
+
 def cluster_converged(cluster: KVCluster) -> bool:
     """True iff every pair of live nodes holds identical state — digest
     trees (and value roots) for packed backends, version-set dicts for
@@ -366,4 +482,5 @@ def cluster_converged(cluster: KVCluster) -> bool:
                for k in keys for n in nodes[1:])
 
 
-__all__ = ["GossipDriver", "NodeGossip", "cluster_converged"]
+__all__ = ["GossipDriver", "LinkState", "NodeGossip", "WanShipper",
+           "cluster_converged"]

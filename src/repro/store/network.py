@@ -84,6 +84,16 @@ class SimNetwork:
         self.delivered = 0
         self.dropped = 0
         self.bytes_sent = 0
+        # datacenter topology (geo tier).  All three maps default empty, in
+        # which case ``_link_params`` returns the flat (base_latency, jitter)
+        # pair and ``send`` is byte-identical to the untagged fabric — same
+        # arithmetic, same single RNG draw per successful send.
+        self.datacenters: Dict[str, str] = {}
+        self._lan_latency: Optional[Tuple[float, float]] = None
+        self._wan_latency: Optional[Tuple[float, float]] = None
+        self._link_overrides: Dict[Tuple[str, str], Tuple[float, float]] = {}
+        self.wan_messages = 0
+        self.wan_bytes = 0
         # timers: (fire_at, seq, callback) min-heap; cancellation is lazy
         # (cancelled ids are skipped when popped) so cancel is O(1)
         self._timers: List[Tuple[float, int, Callable[[], None]]] = []
@@ -135,6 +145,56 @@ class SimNetwork:
         self._topology_changed()
         return before - len(self.queue)
 
+    # -- datacenter topology (geo tier) --------------------------------------
+    def set_datacenter(self, node: str, dc: str) -> None:
+        """Tag ``node`` as living in datacenter ``dc``."""
+        self.datacenters[node] = dc
+
+    def dc_of(self, node: str) -> Optional[str]:
+        return self.datacenters.get(node)
+
+    def set_latency_classes(self, lan: Tuple[float, float],
+                            wan: Tuple[float, float]) -> None:
+        """Give intra-DC and cross-DC links distinct ``(base, jitter)``
+        latency classes.  Links whose endpoints lack DC tags keep the flat
+        default; per-link overrides beat both classes."""
+        self._lan_latency = (float(lan[0]), float(lan[1]))
+        self._wan_latency = (float(wan[0]), float(wan[1]))
+
+    def set_link_latency(self, src: str, dst: str, base: float,
+                         jitter: float) -> None:
+        """Override one *directed* link's latency parameters (the most
+        specific tier: override > DC class > flat default)."""
+        self._link_overrides[(src, dst)] = (float(base), float(jitter))
+
+    def clear_link_latency(self, src: str, dst: str) -> None:
+        self._link_overrides.pop((src, dst), None)
+
+    def _link_params(self, src: str, dst: str) -> Tuple[float, float]:
+        """Resolve ``(base, jitter)`` for one directed link.  With no
+        overrides, classes, or DC tags this returns the constructor pair —
+        ``send`` then computes the exact expression the flat fabric always
+        used, preserving byte-identical traces for untagged clusters."""
+        ov = self._link_overrides.get((src, dst))
+        if ov is not None:
+            return ov
+        if self._lan_latency is not None or self._wan_latency is not None:
+            sdc = self.datacenters.get(src)
+            ddc = self.datacenters.get(dst)
+            if sdc is not None and ddc is not None:
+                if sdc == ddc:
+                    if self._lan_latency is not None:
+                        return self._lan_latency
+                elif self._wan_latency is not None:
+                    return self._wan_latency
+        return self.base_latency, self.jitter
+
+    def is_wan(self, src: str, dst: str) -> bool:
+        """True iff both endpoints are DC-tagged and the tags differ."""
+        sdc = self.datacenters.get(src)
+        ddc = self.datacenters.get(dst)
+        return sdc is not None and ddc is not None and sdc != ddc
+
     def reachable(self, a: str, b: str) -> bool:
         if a in self.down or b in self.down:
             return False
@@ -156,9 +216,14 @@ class SimNetwork:
         if self.drop_rate and self.rng.random() < self.drop_rate:
             self.dropped += 1
             return False
-        latency = self.base_latency + self.rng.random() * self.jitter
+        base, jit = self._link_params(src, dst)
+        latency = base + self.rng.random() * jit
         self.queue.append(Message(src, dst, payload, self.now + latency))
-        self.bytes_sent += payload_nbytes(payload)
+        nbytes = payload_nbytes(payload)
+        self.bytes_sent += nbytes
+        if self.is_wan(src, dst):
+            self.wan_messages += 1
+            self.wan_bytes += nbytes
         return True
 
     def deliver(self, handler: Callable[[Message], None],

@@ -41,8 +41,8 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass
-from typing import Any, Dict, FrozenSet, Iterable, List, Mapping, Optional, \
-    Sequence, Tuple
+from typing import Any, Callable, Dict, FrozenSet, Iterable, List, Mapping, \
+    Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -370,6 +370,15 @@ class PackedVersionStore:
         # makes payload(key_ranges=...) O(divergent slots) instead of
         # O(store); see DESIGN.md §6.3)
         self._bucket_slots: Dict[int, set] = {}
+        # geo tier (DESIGN.md §12): running max over the live wall column
+        # (an O(1)-amortized fold of the array max-reduce the stable
+        # frontier needs), and an optional displacement hook —
+        # ``shadow_hook(key, before_set)`` fires whenever a key's live
+        # version set changes away from a non-empty prior set, so the geo
+        # plane can retain displaced-but-snapshot-visible versions.
+        self.max_wall = 0.0
+        self.shadow_hook: Optional[Callable[
+            [str, FrozenSet[Version]], None]] = None
 
     # -- interning / growth ------------------------------------------------
 
@@ -749,6 +758,8 @@ class PackedVersionStore:
         self.valid[s] = True
         self.values[s] = value
         self.wall[s] = wall
+        if wall > self.max_wall:
+            self.max_wall = wall
         self.n_slots += 1
         self._slots_by_key.setdefault(kix, []).append(s)
         bucket = int(self._key_bucket[kix])
@@ -798,6 +809,7 @@ class PackedVersionStore:
         L, M = len(slots), int(inc_vv.shape[0])
         if M == 0:
             return False
+        before = self.versions(key) if self.shadow_hook is not None else None
         K = L + M
         vvs = np.zeros((K, R), np.int32)
         dids = np.full(K, NO_DOT, np.int32)
@@ -825,6 +837,8 @@ class PackedVersionStore:
                     wall=float(inc_walls[j]) if inc_walls is not None
                     else 0.0)
                 changed = True
+        if changed and before:
+            self.shadow_hook(key, before)
         self.compact()
         self._maybe_grow_buckets()
         return changed
@@ -1042,6 +1056,10 @@ class PackedVersionStore:
         key_ixs, inverse = np.unique(key_ixs_all, return_inverse=True)
         R = self.n_replicas
         N = len(key_ixs)
+        before_sets = None
+        if self.shadow_hook is not None:
+            before_sets = [self.versions(self.keys[int(kx)])
+                           for kx in key_ixs]
 
         # One group per payload key; local resident slots occupy the first
         # positions (duplicates keep the resident copy), incoming rows
@@ -1114,6 +1132,9 @@ class PackedVersionStore:
             self.dot_id[dst] = inc_did[new_rows]
             self.dot_n[dst] = inc_dn[new_rows]
             self.wall[dst] = payload.wall[new_rows]
+            new_max = float(payload.wall[new_rows].max())
+            if new_max > self.max_wall:
+                self.max_wall = new_max
             groups_new = inc_group[new_rows]
             kix_new = key_ixs[groups_new]
             self.key_ix[dst] = kix_new
@@ -1140,6 +1161,11 @@ class PackedVersionStore:
             self.n_slots += n_new
             changed_groups[groups_new] = True
 
+        if before_sets is not None:
+            for g in np.flatnonzero(changed_groups):
+                bs = before_sets[int(g)]
+                if bs:
+                    self.shadow_hook(self.keys[int(key_ixs[int(g)])], bs)
         self.compact()
         self._maybe_grow_buckets()
         return int(changed_groups.sum())
@@ -1156,6 +1182,7 @@ class PackedVersionStore:
         out.valid = self.valid.copy()
         out.values = list(self.values)
         out.wall = self.wall.copy()
+        out.max_wall = self.max_wall
         out.n_slots = self.n_slots
         out.n_dead = self.n_dead
         out.replica_ids = list(self.replica_ids)

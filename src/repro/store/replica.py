@@ -38,17 +38,39 @@ class ObjectBackend:
         self.mechanism = mechanism
         self.node_id = node_id
         self.store: Dict[str, FrozenSet[Version]] = {}
+        # geo tier (DESIGN.md §12): same displacement hook + wall high-water
+        # surface as PackedVersionStore, so the snapshot plane's shadow
+        # retention is backend-agnostic (packed==object conformance).
+        self.max_wall = 0.0
+        self.shadow_hook = None
 
     def versions(self, key: str) -> FrozenSet[Version]:
         return self.store.get(key, frozenset())
 
+    def _store_merged(self, key: str, before: FrozenSet[Version],
+                      merged: FrozenSet[Version]) -> None:
+        self.store[key] = merged
+        if merged:
+            top = max(v.wall for v in merged)
+            if top > self.max_wall:
+                self.max_wall = top
+        if self.shadow_hook is not None and before and merged != before:
+            self.shadow_hook(key, before)
+
     def apply_sync(self, key: str, incoming: FrozenSet[Version]
                    ) -> FrozenSet[Version]:
+        before = self.versions(key)
         merged = sync_versions(
-            self.versions(key), incoming,
+            before, incoming,
             total_order=not self.mechanism.tracks_concurrency)
-        self.store[key] = merged
+        self._store_merged(key, before, merged)
         return merged
+
+    def replace_key(self, key: str, versions: FrozenSet[Version]) -> None:
+        """Overwrite one key's version set with an already-merged result
+        (the bulk delta-round write-back) through the same shadow/wall
+        bookkeeping as ``apply_sync``."""
+        self._store_merged(key, self.versions(key), versions)
 
     def coordinate_update(self, key: str, value: Any,
                           context: CausalContext, *,
@@ -210,6 +232,21 @@ class PackedBackend:
     def total_keys(self) -> int:
         return sum(len(st.keys) for st in self.stores)
 
+    @property
+    def max_wall(self) -> float:
+        """Max over the per-shard wall-column high-water marks (each an
+        O(1) fold maintained by the stores)."""
+        return max(st.max_wall for st in self.stores)
+
+    @property
+    def shadow_hook(self):
+        return self.stores[0].shadow_hook
+
+    @shadow_hook.setter
+    def shadow_hook(self, fn) -> None:
+        for st in self.stores:
+            st.shadow_hook = fn
+
 
 def _as_object_payload(payload: Payload) -> Dict[str, FrozenSet[Version]]:
     """Decode a packed payload for an object-backend receiver (mixed-backend
@@ -322,3 +359,8 @@ class ReplicaNode:
 
     def total_keys(self) -> int:
         return self.backend.total_keys()
+
+    @property
+    def max_wall(self) -> float:
+        """High-water mark of the node's wall column (geo frontier input)."""
+        return self.backend.max_wall

@@ -15,7 +15,9 @@ handful of plane invocations shared by every session.
 tests/test_serving.py: byte-identical results and final replica state vs
 executing each op alone, both backends):
 
-* *Phase plan.*  Admitted ops are ordered into alternating GET/PUT phases.
+* *Phase plan.*  Admitted ops are ordered into alternating GET/PUT phases
+  (geo snapshot reads run before them as one shared frontier resolution —
+  this flush's puts cannot lift the frontier, so the order is exact).
   A get must run after the last already-planned put on any of its keys; a
   put must run after any planned get or put on its keys.  Puts therefore
   never reorder relative to each other (global wall-clock assignment is
@@ -83,7 +85,7 @@ class PendingOp:
                  quorum: int = 1, repair: bool = False,
                  client_id: str = "client", client_counter: int = 0,
                  session: Optional[str] = None, submitted_at: float = 0.0):
-        self.kind = kind                  # "get" | "put"
+        self.kind = kind                  # "get" | "put" | "snapshot"
         self.keys = keys
         self.items = items                # puts: {key: (value, context)}
         self.quorum = quorum
@@ -191,6 +193,7 @@ class OpScheduler:
         self.phases_run = 0
         self.get_calls = 0        # cluster.get_many invocations issued
         self.put_calls = 0        # cluster.put_many invocations issued
+        self.snapshot_calls = 0   # cluster.snapshot_get_many invocations
         self.largest_flush = 0
 
     # -- submission ---------------------------------------------------------
@@ -218,6 +221,20 @@ class OpScheduler:
             quorum=quorum or self.write_quorum,
             client_id=client_id, client_counter=client_counter,
             session=session, submitted_at=self.network.now)
+        self._enqueue(op)
+        return op
+
+    def submit_snapshot_get(self, keys: Sequence[str], *,
+                            client_id: str = "client",
+                            session: Optional[str] = None) -> PendingOp:
+        """Enqueue a causal snapshot GET (geo clusters only).  All snapshot
+        ops admitted into one flush execute as ONE
+        ``cluster.snapshot_get_many`` — a single frontier resolution shared
+        across sessions."""
+        op = PendingOp(
+            "snapshot", tuple(keys),
+            client_id=client_id, session=session,
+            submitted_at=self.network.now)
         self._enqueue(op)
         return op
 
@@ -279,6 +296,17 @@ class OpScheduler:
             self.cluster.deliver_replication(until=self.network.now)
         proxy = self.via
         admitted = self._admit(ops, proxy)
+        # Snapshot ops run as their own phase FIRST: they read at the
+        # Global Stable Frontier, and this flush's puts cannot lift it —
+        # their replication messages / WAN backlog entries are obligations
+        # the frontier folds — so snapshot results are order-insensitive
+        # within the flush, and running them first keeps the plan's
+        # get/put interleave untouched.
+        snaps = [op for op in admitted if op.kind == "snapshot"]
+        if snaps:
+            self.phases_run += 1
+            self._run_snapshot_phase(snaps, proxy)
+            admitted = [op for op in admitted if op.kind != "snapshot"]
         for kind, phase_ops in self._plan(admitted):
             self.phases_run += 1
             if kind == "get":
@@ -305,9 +333,23 @@ class OpScheduler:
             return []
         read_ok: Dict[Tuple[str, int], bool] = {}
         write_probe: Dict[str, Tuple[Optional[str], int]] = {}
+        snap_reason: Dict[str, Optional[str]] = {}
         admitted: List[PendingOp] = []
         for op in ops:
-            if op.kind == "get":
+            if op.kind == "snapshot":
+                blocked = None
+                for k in op.keys:
+                    if k not in snap_reason:
+                        snap_reason[k] = self.cluster.probe_snapshot(
+                            [k], via=proxy)
+                    if snap_reason[k] is not None:
+                        blocked = snap_reason[k]
+                        break
+                if blocked is not None:
+                    op.error = Unavailable(
+                        f"snapshot unavailable via {proxy}: {blocked}")
+                    continue
+            elif op.kind == "get":
                 short = []
                 for k in op.keys:
                     ok = read_ok.get((k, op.quorum))
@@ -417,6 +459,25 @@ class OpScheduler:
             for op in grp:
                 op._result = {k: results[k] for k in op.keys}
 
+    def _run_snapshot_phase(self, ops: List[PendingOp], proxy: str) -> None:
+        union: List[str] = []
+        seen = set()
+        for op in ops:
+            for k in op.keys:
+                if k not in seen:
+                    seen.add(k)
+                    union.append(k)
+        self.snapshot_calls += 1
+        try:
+            results = self.cluster.snapshot_get_many(union, via=proxy)
+        except (Unavailable, RuntimeError) as e:  # defensive: admission
+            for op in ops:                        # already probed these
+                op.error = e if isinstance(e, Unavailable) \
+                    else Unavailable(str(e))
+            return
+        for op in ops:
+            op._result = {k: results[k] for k in op.keys}
+
     def _run_put_phase(self, ops: List[PendingOp], proxy: str) -> None:
         # contiguous same-quorum runs; predicted-short ops run solo so
         # their Unavailable (write applied, quorum missed) stays theirs
@@ -476,7 +537,9 @@ class OpScheduler:
             "phases": self.phases_run,
             "get_calls": self.get_calls,
             "put_calls": self.put_calls,
-            "plane_calls": self.get_calls + self.put_calls,
+            "snapshot_calls": self.snapshot_calls,
+            "plane_calls": self.get_calls + self.put_calls
+            + self.snapshot_calls,
             "largest_flush": self.largest_flush,
         }
 

@@ -27,6 +27,73 @@ class Version:
         return f"<{self.value!r} @ {self.clock!r}>"
 
 
+# -- hybrid logical clocks (geo tier) ---------------------------------------
+#
+# The wall column doubles as a hybrid logical clock (GentleRain+-style):
+# one float64 encodes (l, c) as l + c·2^-20, where l is the physical
+# component (max physical time seen) and c the logical tiebreak counter.
+# Exact in float64 for l < 2^31 and c < 2^20: the integer part needs 31
+# bits, the fraction 20, both well inside the 52-bit mantissa.  Comparing
+# encoded walls IS the HLC order (l first, c second), so the packed
+# store's float64 wall column and every existing resolution path order
+# HLC-minted versions correctly with zero schema change.
+
+HLC_STEP = 2.0 ** -20           # one logical tick in encoded units
+HLC_EPS = 2.0 ** -21            # < any tick: strict-inequality epsilon
+
+
+def hlc_encode(l: int, c: int) -> float:
+    return float(l) + c * HLC_STEP
+
+
+def hlc_decode(wall: float) -> Tuple[int, int]:
+    l = int(wall)
+    return l, int(round((wall - l) / HLC_STEP))
+
+
+class HybridClock:
+    """Per-node HLC state: ``mint`` stamps a local event, ``observe``
+    merges a remote wall (message receive), ``observe_physical`` folds in
+    a bare physical reading (heartbeats).  Minted walls are strictly
+    increasing even when the physical clock stalls or steps backwards —
+    the logical counter absorbs the anomaly (GentleRain+ §3)."""
+
+    __slots__ = ("l", "c")
+
+    def __init__(self, l: int = 0, c: int = 0):
+        self.l = l
+        self.c = c
+
+    def mint(self, physical: float) -> float:
+        pt = int(physical)
+        if pt > self.l:
+            self.l, self.c = pt, 0
+        else:
+            self.c += 1
+            if self.c >= 1 << 20:           # counter overflow: borrow a tick
+                self.l += 1
+                self.c = 0
+        return hlc_encode(self.l, self.c)
+
+    def observe(self, wall: float) -> None:
+        l2, c2 = hlc_decode(wall)
+        if l2 > self.l:
+            self.l, self.c = l2, c2
+        elif l2 == self.l and c2 > self.c:
+            self.c = c2
+
+    def observe_physical(self, physical: float) -> None:
+        pt = int(physical)
+        if pt > self.l:
+            self.l, self.c = pt, 0
+
+    def read(self) -> float:
+        return hlc_encode(self.l, self.c)
+
+    def __repr__(self) -> str:      # pragma: no cover
+        return f"HybridClock(l={self.l}, c={self.c})"
+
+
 def resolution_key(v: Version) -> Tuple[float, str, str]:
     """The total order used to resolve concurrent siblings into a single
     register value: latest wall-time wins, clock repr then value repr break

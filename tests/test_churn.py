@@ -244,6 +244,174 @@ def test_same_seed_identical_message_trace():
 
 
 # ---------------------------------------------------------------------------
+# Geo schedules: whole-DC WAN cuts (+ the usual churn) against a
+# two-datacenter cluster; snapshot reads probed mid-schedule.
+# ---------------------------------------------------------------------------
+
+GEO_DCS = {"east": ("e0", "e1", "e2"), "west": ("w0", "w1", "w2")}
+GEO_NODES = tuple(n for ns in GEO_DCS.values() for n in ns)
+
+
+def _run_geo_schedule(seed, ops, packed, quiesce=True, shards=1):
+    """The churn interpreter's geo twin: fixed membership (mirror placement
+    is static), WAN latency classes, a ``partition_dc`` action that cuts a
+    whole datacenter off the WAN, and ``snapshot_get`` probes whose
+    results are collected for cross-backend comparison."""
+    net = SimNetwork(seed=seed)
+    net.set_latency_classes(lan=(1.0, 0.5), wan=(30.0, 10.0))
+    c = KVCluster(GEO_NODES, DVV_MECHANISM, packed=packed, network=net,
+                  seed=seed, shards=shards, datacenters=GEO_DCS,
+                  wan_period=12.0)
+    driver = GossipDriver(c, period=6.0, seed=seed)
+    contexts = {}
+    snaps = []
+    for t, op in enumerate(ops):
+        kind = op[0]
+        if kind == "put":
+            _, ki, ni, use_ctx = op
+            node = GEO_NODES[ni % len(GEO_NODES)]
+            key = KEYS[ki % len(KEYS)]
+            ctx = contexts.get((node, key)) if use_ctx else None
+            try:
+                c.put(key, f"v{t}", context=ctx, via=node, coordinator=node)
+            except Unavailable:
+                pass
+        elif kind == "get":
+            _, ki, ni = op
+            node = GEO_NODES[ni % len(GEO_NODES)]
+            key = KEYS[ki % len(KEYS)]
+            try:
+                contexts[(node, key)] = c.get(key, via=node).context
+            except Unavailable:
+                pass
+        elif kind == "snapshot_get":
+            _, ki, ni = op
+            node = GEO_NODES[ni % len(GEO_NODES)]
+            key = KEYS[ki % len(KEYS)]
+            try:
+                r = c.snapshot_get(key, via=node)
+                snaps.append((t, key, node, r.values, r.context))
+                contexts[(node, key)] = r.context
+            except Unavailable:
+                snaps.append((t, key, node, None, None))
+        elif kind == "partition_dc":
+            _, di = op
+            dc = list(GEO_DCS)[di % len(GEO_DCS)]
+            cut = set(GEO_DCS[dc])
+            net.partition(cut, set(GEO_NODES) - cut)
+        elif kind == "heal":
+            net.heal()
+        elif kind == "fail":
+            _, ni = op
+            node = GEO_NODES[ni % len(GEO_NODES)]
+            if len(net.down) < len(GEO_NODES) - 1:
+                net.fail_node(node)
+        elif kind == "recover":
+            _, ni = op
+            net.recover_node(GEO_NODES[ni % len(GEO_NODES)])
+        elif kind == "advance":
+            _, dt = op
+            driver.run_for(float(dt))
+        elif kind == "deliver":
+            c.deliver_replication()
+        else:                                    # pragma: no cover
+            raise AssertionError(op)
+    if quiesce:
+        net.heal()
+        for n in list(net.down):
+            net.recover_node(n)
+        c.deliver_replication()
+        driver.run_for(60.0 * len(c.nodes))
+        for _ in range(len(c.nodes) + 1):
+            c.geo.wan_round()
+            c.delta_antientropy_round()
+    return c, driver, snaps
+
+
+def _assert_geo_frontier_converged(c, tag):
+    """Post-heal: every DC's frontier covers every live wall, so snapshot
+    reads equal quorum reads for every key at every proxy."""
+    top = 0.0
+    for k in KEYS:
+        for n in c.nodes:
+            for v in c.nodes[n].versions(k):
+                top = max(top, v.wall)
+    for dc in GEO_DCS:
+        assert c.geo.stable_frontier(dc) >= top, (tag, dc, top)
+        assert c.geo.frontier_lag(dc) == 0.0, (tag, dc)
+    for k in KEYS:
+        ref = c.get(k)
+        for dc, members in GEO_DCS.items():
+            s = c.snapshot_get(k, via=members[0])
+            assert s.values == ref.values, (tag, dc, k)
+            assert s.value == ref.value, (tag, dc, k)
+
+
+def _geo_conformance(seed, ops, tag, shards=1):
+    cp, _, sp = _run_geo_schedule(seed, ops, packed=True, shards=shards)
+    co, _, so = _run_geo_schedule(seed, ops, packed=False, shards=shards)
+    _assert_replicas_agree(cp, ("geo-packed", tag))
+    _assert_replicas_agree(co, ("geo-object", tag))
+    _assert_backends_agree(cp, co, ("geo", tag))
+    assert sp == so, ("geo-snapshots", tag)       # mid-schedule snapshots
+    _assert_geo_frontier_converged(cp, ("geo-packed", tag))
+    _assert_geo_frontier_converged(co, ("geo-object", tag))
+
+
+def _random_geo_ops(seed, n_ops=32):
+    rng = random.Random(seed)
+    ops = []
+    for _ in range(n_ops):
+        p = rng.random()
+        if p < 0.30:
+            ops.append(("put", rng.randrange(8), rng.randrange(8),
+                        rng.random() < 0.5))
+        elif p < 0.42:
+            ops.append(("get", rng.randrange(8), rng.randrange(8)))
+        elif p < 0.54:
+            ops.append(("snapshot_get", rng.randrange(8), rng.randrange(8)))
+        elif p < 0.62:
+            ops.append(("partition_dc", rng.randrange(2)))
+        elif p < 0.68:
+            ops.append(("heal",))
+        elif p < 0.73:
+            ops.append(("fail", rng.randrange(8)))
+        elif p < 0.80:
+            ops.append(("recover", rng.randrange(8)))
+        elif p < 0.95:
+            ops.append(("advance", rng.randrange(1, 25)))
+        else:
+            ops.append(("deliver",))
+    return ops
+
+
+@pytest.mark.geo
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("seed", [1, 19])
+def test_geo_churn_conformance_pinned(seed, shards):
+    _geo_conformance(seed, _random_geo_ops(seed), (seed, shards),
+                     shards=shards)
+
+
+@pytest.mark.geo
+def test_geo_churn_dc_cut_heal_schedule():
+    """Hand-written worst case: writes on both sides of a WAN cut, causal
+    chains crossing the heal, snapshots probed throughout."""
+    ops = [
+        ("put", 0, 0, False), ("advance", 10), ("snapshot_get", 0, 4),
+        ("partition_dc", 0),
+        ("put", 0, 1, True), ("put", 1, 4, False),   # both sides write
+        ("snapshot_get", 0, 4), ("snapshot_get", 1, 1),
+        ("advance", 20), ("heal",), ("advance", 40),
+        ("get", 0, 5), ("put", 2, 5, True),          # chain across the heal
+        ("snapshot_get", 2, 0), ("advance", 30),
+        ("fail", 3), ("snapshot_get", 1, 3), ("recover", 3),
+        ("advance", 25), ("deliver",),
+    ]
+    _geo_conformance(29, ops, "geo-cut-heal")
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis phase: ≥200 randomized schedules across BOTH backends
 # (`make test-churn`; deselected from tier-1 via the slow marker).
 # ---------------------------------------------------------------------------
@@ -280,6 +448,33 @@ try:
            st.sampled_from([1, 4]))
     def test_churn_conformance_fuzzed(seed, ops, shards):
         _conformance(seed, ops, (seed, len(ops), shards), shards=shards)
+
+    _geo_op = st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),               # twice: writes dominate
+        st.tuples(st.just("get"), st.integers(0, 7), st.integers(0, 7)),
+        st.tuples(st.just("snapshot_get"), st.integers(0, 7),
+                  st.integers(0, 7)),
+        st.tuples(st.just("partition_dc"), st.integers(0, 1)),
+        st.tuples(st.just("heal")),
+        st.tuples(st.just("fail"), st.integers(0, 7)),
+        st.tuples(st.just("recover"), st.integers(0, 7)),
+        st.tuples(st.just("advance"), st.integers(1, 25)),
+        st.tuples(st.just("advance"), st.integers(1, 25)),
+        st.tuples(st.just("deliver")),
+    )
+
+    @pytest.mark.slow
+    @pytest.mark.geo
+    @settings(max_examples=100, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20),
+           st.lists(_geo_op, min_size=4, max_size=24),
+           st.sampled_from([1, 4]))
+    def test_geo_churn_conformance_fuzzed(seed, ops, shards):
+        _geo_conformance(seed, ops, (seed, len(ops), shards), shards=shards)
 
     @pytest.mark.slow
     @settings(max_examples=25, deadline=None,

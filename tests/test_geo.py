@@ -1,0 +1,450 @@
+"""Geo-replication tier: DC topology, HLC walls, causal snapshot reads.
+
+Four contract families (DESIGN.md §12):
+
+* **Flat-default byte identity** — an untagged/single-DC cluster on the
+  geo-aware fabric produces the exact pre-geo behaviour: one RNG draw per
+  successful send with the flat ``base + draw * jitter`` arithmetic,
+  integer walls equal to the shared clock, and context tokens without the
+  HLC flag byte.
+* **HLC robustness** — a stalled or backwards-stepping physical clock
+  still mints strictly increasing walls per coordinator (pre-geo code
+  trusted ``clock_time`` raw).
+* **Causal snapshots** — ``snapshot_get*`` is causally consistent on both
+  backends under WAN cuts and randomized schedules, serves entirely from
+  the local DC (zero WAN messages), and conforms packed==object and
+  scheduled==direct.
+* **Topology plumbing** — latency classes and per-link overrides resolve
+  override > class > flat; geo constructor validation; frozen membership.
+"""
+import random
+
+import pytest
+
+from repro.core import DVV_MECHANISM
+from repro.store import (GeoPlane, KVCluster, OpScheduler, SimNetwork,
+                         Unavailable)
+from repro.store.version import HLC_STEP, HybridClock, hlc_decode, hlc_encode
+
+pytestmark = pytest.mark.geo
+
+DCS = {"east": ("e0", "e1", "e2"), "west": ("w0", "w1", "w2")}
+NODES = [n for ns in DCS.values() for n in ns]
+
+
+def geo_cluster(seed=0, packed=True, shards=1, net=None, **kw):
+    net = net or SimNetwork(seed=seed)
+    return KVCluster(NODES, DVV_MECHANISM, packed=packed, network=net,
+                     seed=seed, shards=shards, datacenters=DCS, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Flat-default byte identity (the single-DC regression probe).
+# ---------------------------------------------------------------------------
+
+def _traced_run(tag_dcs):
+    """A fixed workload on a plain (non-geo) cluster, recording every
+    successful send's latency; optionally DC-tag the nodes WITHOUT
+    configuring latency classes — tags alone must change nothing."""
+    net = SimNetwork(seed=99)
+    if tag_dcs:
+        for i, n in enumerate(("a", "b", "c")):
+            net.set_datacenter(n, f"dc{i % 2}")
+    c = KVCluster(("a", "b", "c"), DVV_MECHANISM, network=net, seed=99)
+    trace = []
+    orig = SimNetwork.send
+
+    def send(self, src, dst, payload):
+        before = len(self.queue)
+        ok = orig(self, src, dst, payload)
+        if ok:
+            trace.append((src, dst, self.now, self.queue[-1].deliver_at))
+            assert len(self.queue) == before + 1
+        return ok
+
+    SimNetwork.send = send
+    try:
+        ctx = None
+        for t in range(12):
+            node = ("a", "b", "c")[t % 3]
+            c.put("k", f"v{t}", context=ctx, via=node, coordinator=node)
+            if t % 3 == 0:
+                c.deliver_replication()
+            ctx = c.get("k", via=node).context
+        c.deliver_replication()
+    finally:
+        SimNetwork.send = orig
+    return c, trace
+
+
+def test_flat_default_trace_is_pregeo_arithmetic():
+    """Every successful send consumes exactly one RNG draw and prices
+    latency as ``base + draw * jitter`` — replayable with a fresh
+    ``random.Random(seed)``, i.e. the untagged fabric is byte-identical
+    to the pre-geo one (same stream, same arithmetic, same draw count)."""
+    c, trace = _traced_run(tag_dcs=False)
+    replay = random.Random(99)
+    for (src, dst, now, deliver_at) in trace:
+        expect = now + (c.network.base_latency
+                        + replay.random() * c.network.jitter)
+        assert deliver_at == expect, (src, dst, deliver_at, expect)
+    assert len(trace) > 10
+
+
+def test_dc_tags_alone_change_nothing():
+    """DC tags without ``set_latency_classes`` keep the flat default —
+    identical trace to the untagged run (geo pricing is strictly opt-in).
+    Only the WAN byte meters notice the tags."""
+    c0, t0 = _traced_run(tag_dcs=False)
+    c1, t1 = _traced_run(tag_dcs=True)
+    assert t0 == t1
+    assert c0.network.bytes_sent == c1.network.bytes_sent
+    assert c0.network.wan_messages == 0
+    assert c1.network.wan_messages > 0          # tags meter, never reprice
+    for n in c0.nodes:
+        assert c0.nodes[n].versions("k") == c1.nodes[n].versions("k")
+
+
+def test_single_dc_walls_and_tokens_are_pregeo():
+    """Non-geo clusters mint walls equal to the raw shared clock (the HLC
+    physical branch always wins) and emit tokens without the HLC flag —
+    the exact pre-geo wire bytes."""
+    c = KVCluster(("a", "b"), DVV_MECHANISM, seed=1)
+    for t in range(6):
+        c.put("k", t, via="a")
+    walls = sorted(v.wall for v in c.nodes["a"].versions("k"))
+    assert walls == [float(t) for t in range(1, 7)]
+    r = c.get("k", via="a")
+    assert r.context.hlc == 0.0
+    tok = r.context.to_bytes()
+    assert tok[4] == 0                          # flag byte: no residue, no hlc
+    assert len(tok) == 7 + (2 + 1 + 8)          # header + one entry, no tail
+
+
+# ---------------------------------------------------------------------------
+# Latency classes and per-link overrides.
+# ---------------------------------------------------------------------------
+
+def test_latency_tiers_override_beats_class_beats_flat():
+    net = SimNetwork(seed=3, base_latency=1.0, jitter=0.0)
+    for n in ("a", "b", "x"):
+        net.set_datacenter(n, "d1" if n != "x" else "d2")
+    assert net._link_params("a", "b") == (1.0, 0.0)          # flat (no class)
+    net.set_latency_classes(lan=(2.0, 0.0), wan=(40.0, 5.0))
+    assert net._link_params("a", "b") == (2.0, 0.0)          # LAN class
+    assert net._link_params("a", "x") == (40.0, 5.0)         # WAN class
+    assert net._link_params("a", "untagged") == (1.0, 0.0)   # flat fallback
+    net.set_link_latency("a", "x", 7.0, 0.25)
+    assert net._link_params("a", "x") == (7.0, 0.25)         # override wins
+    assert net._link_params("x", "a") == (40.0, 5.0)         # directed
+    net.clear_link_latency("a", "x")
+    assert net._link_params("a", "x") == (40.0, 5.0)
+    # the send path actually prices through the resolved tier
+    net.set_link_latency("a", "x", 7.0, 0.0)
+    assert net.send("a", "x", "payload")
+    assert net.queue[-1].deliver_at == net.now + 7.0
+    assert net.is_wan("a", "x") and not net.is_wan("a", "b")
+    assert net.wan_messages == 1
+
+
+# ---------------------------------------------------------------------------
+# Hybrid logical clocks.
+# ---------------------------------------------------------------------------
+
+def test_hlc_encode_decode_roundtrip():
+    for l, cnt in [(0, 0), (1, 0), (5, 3), (2**30, 2**19), (12345, 1)]:
+        assert hlc_decode(hlc_encode(l, cnt)) == (l, cnt)
+    assert hlc_encode(5, 0) == 5.0                # pure physical is exact
+    assert hlc_encode(5, 1) == 5.0 + HLC_STEP
+
+
+def test_hlc_mint_monotone_under_backwards_clock():
+    h = HybridClock()
+    prev = 0.0
+    for pt in [10, 11, 12, 5, 5, 5, 13, 2, 2, 14]:
+        w = h.mint(pt)
+        assert w > prev, (pt, w, prev)
+        assert w >= pt                            # never behind physical
+        prev = w
+
+
+def test_cluster_mints_monotone_walls_despite_clock_regression():
+    """The regression the HLC exists for: pre-geo ``cluster.put`` trusted
+    ``clock_time`` raw, so a backwards step would mint duplicate/reversed
+    walls and break LWW resolution.  Now the coordinator's HybridClock
+    absorbs the anomaly — strictly increasing walls, physical part never
+    behind the clock — on geo and plain clusters alike."""
+    for make in (lambda: geo_cluster(seed=2),
+                 lambda: KVCluster(("a", "b"), DVV_MECHANISM, seed=2)):
+        c = make()
+        node = next(iter(c.nodes))
+        seen = []
+        for t in range(8):
+            c.put("k", f"v{t}", via=node, coordinator=node)
+            if t == 3:
+                c.clock_time -= 5.0               # inject the anomaly
+            seen.append(max(v.wall for v in c.nodes[node].versions("k")))
+        assert seen == sorted(seen)
+        assert len(set(seen)) == len(seen), seen  # strictly increasing
+
+
+def test_causal_read_write_orders_walls_across_dcs():
+    """read-at-west → put-at-west must mint above everything the read saw,
+    even when west's own clock view lags: the token's HLC watermark is
+    folded in at the coordinator."""
+    g = geo_cluster(seed=4)
+    g.put("k1", "v1", via="e0")
+    g.deliver_replication()
+    g.geo.wan_round()
+    r = g.snapshot_get("k1", via="w0")
+    assert r.context.hlc > 0.0
+    wall1 = max(v.wall for v in g.nodes["w0"].versions("k1"))
+    g.put("k2", "v2", r.context, via="w0")
+    wall2 = max(v.wall for v in g.nodes["w0"].versions("k2"))
+    assert wall2 > wall1
+    assert wall2 > r.context.hlc
+
+
+# ---------------------------------------------------------------------------
+# Geo topology: construction, placement, membership.
+# ---------------------------------------------------------------------------
+
+def test_geo_constructor_validation():
+    with pytest.raises(ValueError, match="at least two"):
+        KVCluster(("a", "b"), DVV_MECHANISM,
+                  datacenters={"only": ("a", "b")})
+    with pytest.raises(ValueError, match="equal-sized"):
+        KVCluster(("a", "b", "c"), DVV_MECHANISM,
+                  datacenters={"d1": ("a", "b"), "d2": ("c",)})
+    with pytest.raises(ValueError, match="two datacenters"):
+        KVCluster(("a", "b"), DVV_MECHANISM,
+                  datacenters={"d1": ("a",), "d2": ("a",)})
+    with pytest.raises(ValueError, match="cover exactly"):
+        KVCluster(("a", "b", "c"), DVV_MECHANISM,
+                  datacenters={"d1": ("a",), "d2": ("b",)})
+
+
+def test_geo_placement_mirrors_key_space():
+    """Every DC owns an identical copy of the key space: each key's
+    replica set holds its full local replica count in every DC, and
+    mirror rows pair one node per DC."""
+    g = geo_cluster(seed=0, shards=4)
+    assert isinstance(g.geo, GeoPlane)
+    assert g.replication == 3                     # defaults to DC size
+    for key in (f"key{i}" for i in range(40)):
+        reps = g.replicas_for(key)
+        per_dc = {dc: sum(1 for r in reps if g.geo.dc_of[r] == dc)
+                  for dc in DCS}
+        assert per_dc == {"east": 3, "west": 3}, (key, reps)
+    for n in NODES:
+        row = g.geo.mirrors(n)
+        assert len(row) == len(DCS) and n in row
+        assert {g.geo.dc_of[m] for m in row} == set(DCS)
+
+
+def test_geo_membership_is_frozen():
+    g = geo_cluster()
+    with pytest.raises(ValueError, match="geo"):
+        g.add_node("late")
+    with pytest.raises(ValueError, match="geo"):
+        g.remove_node("e0")
+
+
+def test_geo_gossip_stays_lan_scoped():
+    g = geo_cluster()
+    for node in NODES:
+        dc = g.geo.dc_of[node]
+        for step in range(6):
+            for peer in g.gossip_peers(node, 2, step):
+                assert g.geo.dc_of[peer] == dc, (node, peer)
+
+
+# ---------------------------------------------------------------------------
+# Causal snapshot reads.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("packed", [True, False])
+@pytest.mark.parametrize("shards", [1, 4])
+def test_snapshot_zero_wan_and_causal_under_cut(packed, shards):
+    g = geo_cluster(seed=7, packed=packed, shards=shards)
+    net = g.network
+    net.set_latency_classes(lan=(1.0, 0.5), wan=(30.0, 10.0))
+    net.partition(set(DCS["east"]), set(DCS["west"]))
+    g.put("k1", "v1", via="e0")
+    r = g.get("k1", via="e0")
+    g.put("k2", "v2-after-k1", r.context, via="e1")
+    g.deliver_replication()
+    # west sees nothing yet — but serves, locally, with zero WAN traffic
+    wan0 = net.wan_messages
+    s = g.snapshot_get_many(["k1", "k2"], via="w0")
+    assert s["k1"].values == () and s["k2"].values == ()
+    net.heal()
+    g.deliver_replication()
+    g.geo.wan_round()
+    s = g.snapshot_get_many(["k1", "k2"], via="w0")
+    assert s["k2"].values == ("v2-after-k1",)
+    assert s["k1"].values == ("v1",)              # causal: dep visible too
+    assert net.wan_messages == wan0, "snapshot path sent WAN messages"
+
+
+@pytest.mark.parametrize("packed", [True, False])
+def test_snapshot_serves_displaced_versions_from_shadows(packed):
+    """A frontier held below a dominator's wall must still see the
+    displaced predecessor — the stable-shadow retention path — and the
+    shadow is pruned once the obligation clears."""
+    g = geo_cluster(seed=3, packed=packed)
+    g.put("k", "v1", via="e0")
+    g.deliver_replication()
+    g.geo.wan_round()
+    assert g.snapshot_get("k", via="w0").values == ("v1",)
+    g.geo.note_send_failed("e0", "w1", 1.5)       # synthetic obligation
+    r = g.get("k", via="e0")
+    g.put("k", "v2", r.context, via="e0")
+    g.deliver_replication()
+    g.geo.wan_round()                             # west fully displaced v1
+    for w in DCS["west"]:
+        assert g.nodes[w].versions("k") == g.nodes["e0"].versions("k")
+    assert g.snapshot_get("k", via="w0").values == ("v1",)
+    g.delta_antientropy("e0", "w1")               # discharge the obligation
+    assert g.snapshot_get("k", via="w0").values == ("v2",)
+    assert not any(g.geo.shadow.get(w, {}).get("k") for w in DCS["west"])
+
+
+def test_snapshot_requires_local_replicas_only():
+    """A WAN cut never blocks snapshots; a down local replica does (the
+    frontier only promises SOME local member holds each version)."""
+    g = geo_cluster(seed=5)
+    net = g.network
+    net.partition(set(DCS["east"]), set(DCS["west"]))
+    assert g.probe_snapshot(["k"], via="w0") is None
+    g.snapshot_get("k", via="w0")                 # serves (empty) fine
+    net.fail_node("w2")
+    assert g.probe_snapshot(["k"], via="w0") is not None
+    with pytest.raises(Unavailable, match="snapshot"):
+        g.snapshot_get("k", via="w0")
+    net.recover_node("w2")
+    assert g.probe_snapshot(["k"], via="w0") is None
+
+
+def test_frontier_monotone_and_lag_closes():
+    g = geo_cluster(seed=11)
+    net = g.network
+    net.partition(set(DCS["east"]), set(DCS["west"]))
+    fs = [g.geo.stable_frontier("west")]
+    for t in range(10):
+        g.put(f"k{t % 3}", f"v{t}", via="e0")
+        fs.append(g.geo.stable_frontier("west"))
+    assert fs == sorted(fs)                       # monotone under cut
+    assert g.geo.frontier_lag("west") > 0.0       # backlog holds it down
+    net.heal()
+    g.deliver_replication()
+    g.geo.wan_round()
+    assert g.geo.frontier_lag("west") == 0.0      # ships → lag closes
+    assert g.geo.stable_frontier("west") >= fs[-1]
+
+
+def test_wan_shipper_runs_on_sim_time():
+    """The continuous loop: advancing simulated time alone ships committed
+    writes cross-DC and converges snapshot reads, with backlogs discharged
+    by complete ticks (no hand-cranked wan_round)."""
+    g = geo_cluster(seed=13, wan_period=10.0)
+    net = g.network
+    g.put("k", "v1", via="e0")
+    assert g.geo.wan_backlog.get(("east", "west"))
+    net.advance(200.0)
+    assert g.snapshot_get("k", via="w0").values == ("v1",)
+    assert not g.geo.wan_backlog.get(("east", "west"))
+    assert g.geo.shipper.ticks > 0 and g.geo.wan_rounds > 0
+    # idle links back off: later ticks come slower than the base period
+    t0 = g.geo.shipper.ticks
+    net.advance(200.0)
+    assert g.geo.shipper.ticks - t0 < 200.0 / 10.0
+
+
+@pytest.mark.parametrize("packed", [True, False])
+def test_snapshot_packed_object_conformance(packed):
+    """Randomized mixed workload: snapshot results agree across backends
+    at every probe point (same walls, values, tokens)."""
+    del packed  # both built below; param keeps ids stable under -k filters
+    rng = random.Random(21)
+    ops = []
+    for t in range(30):
+        p = rng.random()
+        if p < 0.5:
+            ops.append(("put", rng.randrange(4), rng.randrange(6)))
+        elif p < 0.7:
+            ops.append(("snap", rng.randrange(4), rng.randrange(6)))
+        elif p < 0.8:
+            ops.append(("cut",))
+        elif p < 0.9:
+            ops.append(("heal",))
+        else:
+            ops.append(("ship",))
+
+    def run(packed_flag):
+        g = geo_cluster(seed=21, packed=packed_flag)
+        out = []
+        for op in ops:
+            if op[0] == "put":
+                _, ki, ni = op
+                try:
+                    g.put(f"k{ki}", f"v{len(out)}", via=NODES[ni])
+                except Unavailable:
+                    pass
+            elif op[0] == "snap":
+                _, ki, ni = op
+                try:
+                    r = g.snapshot_get(f"k{ki}", via=NODES[ni])
+                    out.append((r.values, r.context))
+                except Unavailable:
+                    out.append(None)
+            elif op[0] == "cut":
+                g.network.partition(set(DCS["east"]), set(DCS["west"]))
+            elif op[0] == "heal":
+                g.network.heal()
+            else:
+                g.deliver_replication()
+                g.geo.wan_round()
+        return out
+
+    assert run(True) == run(False)
+
+
+def test_scheduled_snapshots_match_direct_and_share_one_plane_call():
+    g = geo_cluster(seed=6)
+    g.put("a", "v1", via="e0")
+    g.put("b", "v2", via="e1")
+    g.deliver_replication()
+    g.geo.wan_round()
+    sched = OpScheduler(g, via="w0", max_batch=16, max_delay=2.0)
+    s1 = sched.session("s1")
+    s2 = sched.session("s2")
+    direct = g.snapshot_get_many(["a", "b"], via="w0")
+    planes0 = g.plane_reads
+    op1 = s1.submit_snapshot_get(["a"])
+    op2 = s2.submit_snapshot_get(["b", "a"])
+    op3 = s1.submit_snapshot_get(["b"])
+    sched.flush()
+    assert op1.result() == {"a": direct["a"]}
+    assert op2.result() == {"b": direct["b"], "a": direct["a"]}
+    assert op3.result() == {"b": direct["b"]}
+    assert sched.stats()["snapshot_calls"] == 1
+    assert g.plane_reads == planes0 + 1           # one shared invocation
+
+
+def test_scheduled_flush_snapshot_precedes_same_flush_puts():
+    """Within one flush, snapshot results are those of the pre-flush
+    frontier: a put on the same key in the same batch is not yet stable
+    (its replication/WAN obligations hold the frontier), so the snapshot
+    must not observe it — deterministic order: snapshots run first."""
+    g = geo_cluster(seed=8)
+    g.put("k", "old", via="w0")
+    g.deliver_replication()
+    g.geo.wan_round()
+    sched = OpScheduler(g, via="w0", max_batch=64, max_delay=2.0)
+    s = sched.session("s")
+    snap = s.submit_snapshot_get(["k"])
+    put = s.submit_put({"k": ("new", None)})
+    sched.flush()
+    assert put.error is None
+    assert snap.result()["k"].values == ("old",)
