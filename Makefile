@@ -8,7 +8,9 @@
 # (including its slow kernel/fuzz phases); `test-serving` runs the
 # coalescing serving-plane suite (conformance + the slow scheduled-churn
 # phase); `test-geo` runs the geo-replication tier (DC topology, HLC
-# walls, causal snapshot plane, incl. its slow DC-partition fuzz phase).
+# walls, causal snapshot plane, incl. its slow DC-partition fuzz phase);
+# `test-faults` runs the fault-injection matrix + self-driving membership
+# suite (pinned conformance lanes + the slow hypothesis phase).
 # `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
@@ -17,7 +19,8 @@
 # writes BENCH_read_path.json; `bench-serving` runs the closed-loop
 # coalescing sweep and writes BENCH_serving.json; `bench-geo` runs the
 # geo tier sweep (snapshot latency, frontier staleness, WAN bytes) and
-# writes BENCH_geo.json; `lint` is a
+# writes BENCH_geo.json; `bench-faults` runs the detection-latency and
+# flapping-wire-cost lanes and writes BENCH_faults.json; `lint` is a
 # dependency-free syntax/bytecode pass (the container has no flake8/ruff
 # baked in).
 
@@ -25,8 +28,9 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-all test-property test-churn test-read test-shard \
-	test-serving test-geo bench-smoke bench bench-delta bench-client \
-	bench-churn bench-read bench-shard bench-serving bench-geo lint check
+	test-serving test-geo test-faults bench-smoke bench bench-delta \
+	bench-client bench-churn bench-read bench-shard bench-serving \
+	bench-geo bench-faults lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -52,6 +56,9 @@ test-serving:
 test-geo:
 	$(PY) -m pytest -q -m geo
 
+test-faults:
+	$(PY) -m pytest -q -m faults
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
@@ -66,6 +73,8 @@ bench-smoke:
 	$(PY) -c "from benchmarks.serving_bench import rows; \
 	          print('\n'.join(rows()))"
 	$(PY) -c "from benchmarks.geo_bench import rows; \
+	          print('\n'.join(rows()))"
+	$(PY) -c "from benchmarks.faults_bench import rows; \
 	          print('\n'.join(rows()))"
 
 bench:
@@ -93,6 +102,9 @@ bench-serving:
 
 bench-geo:
 	$(PY) -m benchmarks.geo_bench
+
+bench-faults:
+	$(PY) -m benchmarks.faults_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

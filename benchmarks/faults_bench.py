@@ -1,0 +1,196 @@
+"""Fault benchmarks: what self-driving membership buys (DESIGN.md §13).
+
+Two lanes, both on simulated time:
+
+* **Detection / unavailability** — a 5-node cluster with ``replication=3,
+  write_quorum=3`` loses one node mid-workload.  Three operating modes:
+  ``none`` (nobody removes it — every write whose replica set contains the
+  corpse fails its quorum forever), ``manual`` (an operator oracle calls
+  ``remove_node`` the instant the node dies — the hand-managed best case)
+  and ``auto`` (the ``MembershipController`` evicts when accrual suspicion
+  crosses the dead threshold).  Reported: detection latency (eviction time
+  minus crash time) and the unavailability window (failed writes during
+  the post-crash interval).  The claim: auto lands within a bounded
+  ``dead_threshold × period`` of the oracle, and both are a step change
+  from ``none``.
+
+* **Flapping wire cost** — one node's links to every peer flap (down
+  phases long enough for suspicion to engage), with and without the
+  controller attached.  With suspicion-driven backoff the driver skips
+  suspects in regular rotation/wakes and aims one capped probe round per
+  tick instead, so redundant catch-up payload shipped to a peer that is
+  about to vanish again shrinks; the digest phase (cheap, fixed-size) is
+  unaffected.  Reported: total wire and payload-phase bytes for both
+  variants, plus convergence after the flaps stop.
+"""
+from __future__ import annotations
+
+import json
+import random
+from typing import Dict, List, Optional
+
+from repro.core import DVV_MECHANISM
+from repro.store import (GossipDriver, KVCluster, MembershipController,
+                         SimNetwork, Unavailable, cluster_converged)
+
+PERIOD = 10.0
+T_FAIL = 200.0
+T_END = 900.0
+WRITE_EVERY = 2.0
+N_KEYS = 24
+
+
+def detection_cell(mode: str, seed: int = 0) -> Dict:
+    """One (mode,) cell of the detection/unavailability lane.  ``mode`` is
+    ``none`` | ``manual`` | ``auto``."""
+    ids = tuple(f"n{i}" for i in range(5))
+    victim = "n2"
+    net = SimNetwork(seed=seed)
+    c = KVCluster(ids, DVV_MECHANISM, network=net, seed=seed,
+                  replication=3, write_quorum=3)
+    driver = GossipDriver(c, period=PERIOD, seed=seed)
+    mem = MembershipController(c, period=PERIOD, seed=seed, readmit=False) \
+        if mode == "auto" else None
+    wrng = random.Random(seed * 13 + 7)
+    ok = failed = 0
+    failed_after = 0
+    evicted_at: Optional[float] = None
+    crashed = False
+    while net.now < T_END:
+        driver.run_for(WRITE_EVERY)
+        if not crashed and net.now >= T_FAIL:
+            crashed = True
+            net.fail_node(victim)
+            if mode == "manual":            # the operator oracle
+                c.remove_node(victim, handoff=True)
+                evicted_at = net.now
+        if mode == "auto" and evicted_at is None and victim not in c.nodes:
+            evicted_at = mem._evicted[victim]
+        live = [n for n in c.nodes if n not in net.down]
+        node = live[wrng.randrange(len(live))]
+        try:
+            c.put(f"k{wrng.randrange(N_KEYS)}", f"v@{net.now:.0f}",
+                  via=node)
+            ok += 1
+        except Unavailable:
+            failed += 1
+            if crashed:
+                failed_after += 1
+    window = T_END - T_FAIL
+    return {
+        "mode": mode,
+        "ops_ok": ok,
+        "ops_failed": failed,
+        "failed_after_crash": failed_after,
+        "unavailable_frac_after_crash": round(
+            failed_after / max((ok + failed) * window / T_END, 1), 3),
+        "detection_latency_s": (round(evicted_at - T_FAIL, 1)
+                                if evicted_at is not None else None),
+        "victim_evicted": victim not in c.nodes,
+        "queued_to_victim": net.queued_for(victim),
+    }
+
+
+def flapping_cell(backoff: bool, seed: int = 4) -> Dict:
+    """One (backoff,) cell of the flapping lane: same seed, same flap
+    schedule, same writes — the only difference is whether a controller
+    (suspicion source) is attached."""
+    ids = ("a", "b", "c", "d", "e")
+    flappy = "e"
+    net = SimNetwork(seed=seed)
+    c = KVCluster(ids, DVV_MECHANISM, network=net, seed=seed)
+    driver = GossipDriver(c, period=PERIOD, seed=seed)
+    if backoff:
+        # dead_threshold out of reach: pure suspicion steering, no evictions
+        MembershipController(c, period=PERIOD, seed=seed, dead_threshold=1e9)
+    for peer in ids[:-1]:
+        # down phases outlast 3x the clamped expected interval, so the
+        # accrual detector actually marks the flapper suspect each cycle
+        net.flap_link(flappy, peer, up_for=25.0, down_for=150.0)
+    wrng = random.Random(99)
+    t = 0.0
+    while t < 3000.0:
+        driver.run_for(5.0)
+        t += 5.0
+        node = ids[wrng.randrange(len(ids) - 1)]
+        try:
+            c.put(f"k{wrng.randrange(N_KEYS)}", f"v{t}", via=node,
+                  coordinator=node)
+        except Unavailable:
+            pass
+    net.stop_flaps()
+    driver.run_for(400.0)
+    c.deliver_replication()
+    for _ in range(5):
+        c.delta_antientropy_round()
+    return {
+        "backoff": backoff,
+        "wire_bytes": driver.wire_bytes(),
+        "payload_bytes": driver.payload_bytes,
+        "digest_bytes": driver.digest_bytes,
+        "rounds": driver.rounds,
+        "suspect_probes": driver.suspect_probes,
+        "converged": bool(cluster_converged(c)),
+    }
+
+
+def faults_rows(json_path: Optional[str] = "BENCH_faults.json",
+                seed: int = 0) -> List[str]:
+    out, det, flap = [], [], []
+    for mode in ("none", "manual", "auto"):
+        det.append(detection_cell(mode, seed=seed))
+    off = flapping_cell(backoff=False)
+    on = flapping_cell(backoff=True)
+    flap = [off, on]
+    auto = next(r for r in det if r["mode"] == "auto")
+    none = next(r for r in det if r["mode"] == "none")
+    manual = next(r for r in det if r["mode"] == "manual")
+    wire_ratio = off["wire_bytes"] / max(on["wire_bytes"], 1)
+    payload_ratio = off["payload_bytes"] / max(on["payload_bytes"], 1)
+    out.append(
+        f"faults_detect_auto,{auto['detection_latency_s']},"
+        f"failed_after={auto['failed_after_crash']}"
+        f"/manual={manual['failed_after_crash']}"
+        f"/none={none['failed_after_crash']}")
+    out.append(
+        f"faults_flap_backoff,{on['wire_bytes']},"
+        f"payload_savings={payload_ratio:.2f}x;"
+        f"wire_savings={wire_ratio:.2f}x")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({
+                "bench": "faults",
+                "note": ("Detection lane: 5 nodes, replication=3, "
+                         "write_quorum=3, one crash at t=200s of a 900s "
+                         "run, writes every 2s; unavailability = quorum "
+                         "failures after the crash.  auto = accrual "
+                         "controller (dead at 8 x 10s intervals), manual "
+                         "= operator removes at crash instant, none = no "
+                         "removal.  Flapping lane: one node's links flap "
+                         "25s up / 150s down for 3000s under writes; "
+                         "backoff = suspicion steering (suspects leave "
+                         "the gossip rotation, one capped probe round "
+                         "instead).  payload_bytes is the redundant-"
+                         "catch-up metric; the digest phase is flat."),
+                "config": {"period_s": PERIOD, "t_fail_s": T_FAIL,
+                           "t_end_s": T_END, "keys": N_KEYS},
+                "detection": det,
+                "flapping": flap,
+                "summary": {
+                    "auto_detection_latency_s": auto["detection_latency_s"],
+                    "failed_writes_none": none["failed_after_crash"],
+                    "failed_writes_manual": manual["failed_after_crash"],
+                    "failed_writes_auto": auto["failed_after_crash"],
+                    "flap_wire_savings": round(wire_ratio, 3),
+                    "flap_payload_savings": round(payload_ratio, 3),
+                }}, f, indent=1)
+    return out
+
+
+def rows() -> List[str]:
+    """Benchmark-harness hook (`make bench-faults` writes the JSON)."""
+    return faults_rows(json_path=None)
+
+
+if __name__ == "__main__":
+    print("\n".join(faults_rows()))

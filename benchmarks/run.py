@@ -13,10 +13,11 @@ bounded.  Sections:
   scale_*          — metadata growth along clients/replicas/updates
                      (the §6/§7 scalability claim)
   dvv_leq_* etc.   — kernel-layer throughput (TPU-adaptation layer)
-  delta_/client_/churn_/read_/shard_/serving_/geo_*
+  delta_/client_/churn_/read_/shard_/serving_/geo_/faults_*
                    — the store-plane suites (anti-entropy, batched
                      client API, churn, read path, sharding, coalescing
-                     serving plane, geo-replication tier)
+                     serving plane, geo-replication tier, fault matrix
+                     + self-driving membership)
 
 Exits non-zero if any mechanism deviates from the paper's qualitative
 outcome (``paper_figures.check_paper_claims``).
@@ -52,8 +53,8 @@ def _merge_smoke(json_path: str, rows: list) -> None:
 
 
 def main() -> None:
-    from . import churn_bench, client_bench, delta_bench, geo_bench, \
-        kernel_bench, paper_figures, read_bench, scalability, \
+    from . import churn_bench, client_bench, delta_bench, faults_bench, \
+        geo_bench, kernel_bench, paper_figures, read_bench, scalability, \
         serving_bench, shard_bench
 
     # (module, BENCH json its full sweep owns — None: prints rows only)
@@ -68,6 +69,7 @@ def main() -> None:
         (shard_bench, "BENCH_sharding.json"),
         (serving_bench, "BENCH_serving.json"),
         (geo_bench, "BENCH_geo.json"),
+        (faults_bench, "BENCH_faults.json"),
     ]
 
     rows = []

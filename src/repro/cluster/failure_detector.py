@@ -1,56 +1,10 @@
-"""Accrual-style failure detection over heartbeats.
-
-Each worker stamps heartbeats into the local table (in a real deployment a
-gossip channel; here the simulated cluster driver calls ``record``).  The
-suspicion level is the normalized time since the last heartbeat; crossing
-``suspect_threshold`` marks the node suspect (straggler candidate), crossing
-``dead_threshold`` lets the elastic controller declare it dead through the
-DVV membership store.
+"""Compat shim: ``FailureDetector`` was promoted to a first-class store
+citizen (``repro.store.failure``), where it drives the self-driving
+membership loop (DESIGN.md §13).  The training-sim runtime keeps importing
+it from here; new code should import from ``repro.store``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from ..store.failure import FailureDetector
 
-
-@dataclass
-class FailureDetector:
-    heartbeat_interval: float = 1.0
-    suspect_threshold: float = 3.0   # intervals without a beat -> straggler
-    dead_threshold: float = 8.0      # intervals without a beat -> dead
-    last_beat: Dict[str, float] = field(default_factory=dict)
-    history: Dict[str, List[float]] = field(default_factory=dict)
-
-    def record(self, node: str, now: float) -> None:
-        prev = self.last_beat.get(node)
-        if prev is not None:
-            self.history.setdefault(node, []).append(now - prev)
-            # keep a bounded window for the adaptive interval estimate
-            if len(self.history[node]) > 64:
-                self.history[node] = self.history[node][-64:]
-        self.last_beat[node] = now
-
-    def _expected_interval(self, node: str) -> float:
-        hist = self.history.get(node)
-        if not hist:
-            return self.heartbeat_interval
-        return max(sum(hist) / len(hist), 1e-9)
-
-    def suspicion(self, node: str, now: float) -> float:
-        """0 = just heard from it; grows linearly in missed intervals."""
-        if node not in self.last_beat:
-            return float("inf")
-        return (now - self.last_beat[node]) / self._expected_interval(node)
-
-    def suspects(self, now: float) -> List[str]:
-        return [n for n in self.last_beat
-                if self.suspect_threshold <= self.suspicion(n, now)
-                < self.dead_threshold]
-
-    def dead(self, now: float) -> List[str]:
-        return [n for n in self.last_beat
-                if self.suspicion(n, now) >= self.dead_threshold]
-
-    def alive(self, now: float) -> List[str]:
-        return [n for n in self.last_beat
-                if self.suspicion(n, now) < self.suspect_threshold]
+__all__ = ["FailureDetector"]

@@ -3,6 +3,7 @@ from .bulk import DeltaSyncStats, delta_antientropy
 from .client import KVClient
 from .cluster import GetResult, KVCluster, PutAck
 from .context import CausalContext, EMPTY_CONTEXT
+from .failure import FailureDetector, MembershipController
 from .geo import GeoPlane
 from .gossip import GossipDriver, WanShipper, cluster_converged
 from .network import SimNetwork, Unavailable
@@ -20,6 +21,7 @@ __all__ = [
     "CausalContext", "EMPTY_CONTEXT",
     "SimNetwork", "Unavailable",
     "GossipDriver", "WanShipper", "cluster_converged",
+    "FailureDetector", "MembershipController",
     "GeoPlane", "HybridClock", "hlc_encode", "hlc_decode",
     "OpScheduler", "PendingOp", "ClosedLoopEngine",
     "ReplicaNode", "Version", "sync_versions", "clocks_of", "values_of",

@@ -224,6 +224,13 @@ class KVCluster:
         # this number per-op toward zero; the serving benchmark reads it.
         self.plane_reads = 0
         self.plane_writes = 0
+        # Self-driving membership (DESIGN.md §13): a MembershipController
+        # registers itself here at construction.  When present, its
+        # suspicion levels deprioritize suspect replicas in quorum
+        # assembly/coordinator choice and steer the gossip driver; when
+        # None (the default) every path below is byte-identical to the
+        # hand-managed cluster.
+        self.membership = None
 
     # -- membership (dynamic: nodes join and leave at runtime) ----------------
     def add_node(self, node_id: str, *, bootstrap: bool = True,
@@ -382,8 +389,18 @@ class KVCluster:
         reachable = [r for r in self.replicas_for(key)
                      if self.network.reachable(via, r)]
         # Local read preference: if the proxy is itself a replica, contact it
-        # first (how Riak/Dynamo coordinators behave).
-        reachable.sort(key=lambda r: (r != via,))
+        # first (how Riak/Dynamo coordinators behave).  With a membership
+        # controller attached, suspect replicas sort last — a quorum that
+        # can be filled from non-suspect members never waits on a node the
+        # failure detector already distrusts (the sort is stable, so the
+        # non-suspect order is unchanged).
+        mem = self.membership
+        if mem is None:
+            reachable.sort(key=lambda r: (r != via,))
+        else:
+            now = self.network.now
+            reachable.sort(
+                key=lambda r: (r != via, mem.is_suspect(r, now)))
         return reachable
 
     def _pick_coordinator(self, proxy: str, key: str,
@@ -405,6 +422,14 @@ class KVCluster:
             pdc = self.geo.dc_of.get(proxy)
             candidates.sort(
                 key=lambda r: (r != proxy, self.geo.dc_of[r] != pdc))
+        elif self.membership is not None:
+            # never coordinate a write at a suspect if a trusted replica
+            # is available: a coordinator about to be evicted is the
+            # sole-copy-write risk the controller exists to retire
+            now = self.network.now
+            candidates.sort(
+                key=lambda r: (r != proxy,
+                               self.membership.is_suspect(r, now)))
         else:
             candidates.sort(key=lambda r: (r != proxy,))
         return candidates[0]
@@ -912,7 +937,8 @@ class KVCluster:
 
     def gossip_tick(self, node: str, *, step: Optional[int] = None,
                     fanout: int = 1, max_ranges: RangeBudget = None,
-                    use_kernel: bool = False
+                    use_kernel: bool = False,
+                    exclude: FrozenSet[str] = frozenset()
                     ) -> List[Tuple[str, DeltaSyncStats]]:
         """One node's bounded gossip pushes — the unit the continuous
         ``GossipDriver`` fires per timer (its adaptation needs to know
@@ -920,7 +946,10 @@ class KVCluster:
         ``step`` defaults to a per-node counter so hand-cranked ticks
         still cycle all peers; ``max_ranges`` defaults to
         ``delta_range_budget``.  Unreachable sampled peers are skipped
-        (the tick is best-effort)."""
+        (the tick is best-effort), as are peers in ``exclude`` — the
+        driver's suspicion backoff: suspects leave the regular rotation
+        (skipping never perturbs the seeded schedule itself) and get a
+        dedicated probe round instead."""
         if node not in self.nodes:
             return []
         if step is None:
@@ -930,7 +959,7 @@ class KVCluster:
             max_ranges = self.delta_range_budget
         out = []
         for b in self.gossip_peers(node, fanout, step):
-            if self.network.reachable(node, b):
+            if b not in exclude and self.network.reachable(node, b):
                 out.append((b, self.delta_antientropy(
                     node, b, use_kernel=use_kernel, max_ranges=max_ranges)))
         return out

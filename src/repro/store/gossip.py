@@ -114,6 +114,7 @@ class GossipDriver:
         self.payload_slots = 0
         self.fallbacks = 0
         self.divergent_ticks = 0
+        self.suspect_probes = 0
         if autostart:
             self.start()
 
@@ -192,6 +193,15 @@ class GossipDriver:
         st = self._state.get(node)
         if st is None or node not in self.cluster.nodes:
             return
+        # Suspicion backoff (DESIGN.md §13): never snap cadences FOR a
+        # suspect.  A flapping link fires topology wakes on every toggle;
+        # without this filter each flap re-arms full-rate gossip toward a
+        # peer the failure detector already distrusts — the wire-cost
+        # difference the faults benchmark measures.
+        mem = self.cluster.membership
+        if mem is not None and mem.is_suspect(node,
+                                              self.cluster.network.now):
+            return
         st.interval = self.period
         st.idle_ticks = 0
         horizon = self.period * (1.0 + self.jitter)
@@ -240,12 +250,36 @@ class GossipDriver:
             # ramped shards carry their own budget; the rest ride the base
             budget = {s: st.shard_ranges.get(s, st.max_ranges)
                       for s in range(self.cluster.shards)}
+        # Suspicion steering (DESIGN.md §13): suspects leave this node's
+        # regular rotation (skipped, never resampled — the seeded schedule
+        # is untouched) and instead receive ONE dedicated base-budget
+        # probe round per fire, aimed at the most-suspect reachable
+        # member.  A suspect that is merely slow gets focused catch-up
+        # attention; a genuinely dead one costs a reachability check, not
+        # a round.
+        mem = self.cluster.membership
+        now = self.cluster.network.now
+        suspects = frozenset(
+            s for s in mem.suspect_nodes(now) if s != node) \
+            if mem is not None else frozenset()
         for peer, r in self.cluster.gossip_tick(
                 node, step=st.step, fanout=st.fanout,
-                max_ranges=budget, use_kernel=self.use_kernel):
+                max_ranges=budget, use_kernel=self.use_kernel,
+                exclude=suspects):
             rounds.append(r)
             if self.adapt and (r.buckets_divergent or r.changed):
                 self._wake(peer)     # it knows it differs too: drain fast
+        if suspects:
+            probeable = [s for s in suspects
+                         if s in self.cluster.nodes
+                         and self.cluster.network.reachable(node, s)]
+            if probeable:
+                target = max(probeable,
+                             key=lambda s: (mem.suspicion(s, now), s))
+                rounds.append(self.cluster.delta_antientropy(
+                    node, target, use_kernel=self.use_kernel,
+                    max_ranges=self.base_ranges))
+                self.suspect_probes += 1
         st.step += 1
         self._account(rounds)
         if self.adapt:

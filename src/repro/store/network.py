@@ -11,6 +11,18 @@ fault-tolerance story of the framework):
   Interleaving control is what exposes the causality bugs of the §3
   baselines.
 
+Beyond symmetric partitions and crashed nodes, the fabric carries a
+*fault-injection matrix* (DESIGN.md §13): directed link cuts
+(``cut_link`` — A can talk to B while B cannot answer), slow-not-dead
+nodes (``set_delay_factor`` — per-node latency multipliers applied
+*after* the main RNG draw, so the no-fault trace is byte-identical),
+seeded message duplication and reordering (``set_duplication`` /
+``set_reorder`` — drawn from a dedicated ``fault_rng`` stream so
+enabling them never perturbs base latency draws), and flapping links
+(``flap_link`` — timer-chained up/down toggles).  These are exactly the
+conditions under which accrual failure detection earns its keep, and
+the conformance suite asserts packed==object under every mode.
+
 The fabric also carries *timers* (``schedule``/``cancel``): callbacks keyed
 to simulated time, fired in deterministic ``(fire_at, seq)`` order by
 ``advance``.  They are what lets the gossip driver (store/gossip.py) run
@@ -84,6 +96,20 @@ class SimNetwork:
         self.delivered = 0
         self.dropped = 0
         self.bytes_sent = 0
+        # fault-injection matrix (DESIGN.md §13).  All state defaults off;
+        # the dup/reorder draws come from a dedicated RNG stream so that
+        # enabling a fault mode never shifts the main ``rng`` latency
+        # sequence (trace determinism for everything else is preserved).
+        self.link_cuts: Set[Tuple[str, str]] = set()      # directed (src, dst)
+        self.delay_factors: Dict[str, float] = {}         # node -> multiplier
+        self.dup_rate = 0.0
+        self.reorder_rate = 0.0
+        self.reorder_spread = 0.0
+        self.fault_rng = random.Random(f"{seed}:faults")
+        self.duplicated = 0
+        self.reordered = 0
+        self._flaps: Dict[int, Tuple[str, str]] = {}      # flap id -> link
+        self._flap_seq = 0
         # datacenter topology (geo tier).  All three maps default empty, in
         # which case ``_link_params`` returns the flat (base_latency, jitter)
         # pair and ``send`` is byte-identical to the untagged fabric — same
@@ -117,8 +143,105 @@ class SimNetwork:
         self._topology_changed()
 
     def heal(self) -> None:
+        """Full heal: clears partitions *and* directed link cuts (active
+        flaps will re-cut their link on the next down phase; use
+        ``stop_flaps`` first for a durable heal)."""
         self.partition_groups = None
+        self.link_cuts.clear()
         self._topology_changed()
+
+    def cut_link(self, src: str, dst: str) -> None:
+        """Cut one *directed* link: ``src`` can no longer reach ``dst``
+        while ``dst -> src`` stays up — the asymmetric failure mode a
+        symmetric ``partition`` cannot express (a node whose outbound
+        NIC died still hears everyone)."""
+        self.link_cuts.add((src, dst))
+        self._topology_changed()
+
+    def heal_link(self, src: str, dst: str) -> None:
+        if (src, dst) in self.link_cuts:
+            self.link_cuts.discard((src, dst))
+            self._topology_changed()
+
+    def flap_link(self, a: str, b: str, *, up_for: float, down_for: float,
+                  start_down: bool = True) -> int:
+        """Start a flapping link: ``a <-> b`` (both directions) toggles
+        down for ``down_for`` then up for ``up_for`` simulated seconds on
+        the timer heap, forever, until ``stop_flap``.  Returns a flap id.
+        Flapping is the adversarial input for membership: every toggle
+        fires topology listeners, so naive cadence-snapping gossip pays
+        full price per flap while suspicion-driven backoff does not."""
+        if up_for <= 0 or down_for <= 0:
+            raise ValueError("flap phases must be positive")
+        self._flap_seq += 1
+        fid = self._flap_seq
+        self._flaps[fid] = (a, b)
+
+        def phase(down: bool) -> None:
+            if fid not in self._flaps:      # stopped: orphan timer, no-op
+                return
+            if down:
+                self.link_cuts.add((a, b))
+                self.link_cuts.add((b, a))
+            else:
+                self.link_cuts.discard((a, b))
+                self.link_cuts.discard((b, a))
+            self._topology_changed()
+            self.schedule(down_for if down else up_for,
+                          lambda: phase(not down))
+
+        phase(start_down)
+        return fid
+
+    def stop_flap(self, flap_id: int) -> None:
+        """Stop one flap and heal its link (the orphaned phase timer
+        becomes a no-op)."""
+        link = self._flaps.pop(flap_id, None)
+        if link is not None:
+            a, b = link
+            self.link_cuts.discard((a, b))
+            self.link_cuts.discard((b, a))
+            self._topology_changed()
+
+    def stop_flaps(self) -> None:
+        for fid in list(self._flaps):
+            self.stop_flap(fid)
+
+    def set_delay_factor(self, node: str, factor: float) -> None:
+        """Make ``node`` slow-not-dead: every message it sends or receives
+        takes ``factor``× the drawn latency.  Applied *after* the main RNG
+        draw, so a factor of 1.0 (the default) leaves traces
+        byte-identical.  Slow nodes stay reachable — they strain quorum
+        tails and failure detection without tripping ``reachable``."""
+        if factor < 0:
+            raise ValueError("delay factor must be non-negative")
+        if factor == 1.0:
+            self.delay_factors.pop(node, None)
+        else:
+            self.delay_factors[node] = float(factor)
+
+    def set_duplication(self, rate: float) -> None:
+        """Duplicate each queued send with probability ``rate`` (a second
+        copy with its own fault-stream latency).  Duplicates are real
+        traffic: they count toward ``bytes_sent`` (and WAN accounting),
+        and the store must absorb them — DVV sync is a join, so
+        re-applying a payload is a no-op (idempotence tested in the fault
+        suite)."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError("duplication rate must be in [0, 1]")
+        self.dup_rate = float(rate)
+
+    def set_reorder(self, rate: float, spread: float = 25.0) -> None:
+        """With probability ``rate``, add up to ``spread`` extra seconds of
+        fault-stream latency to a send — enough to overtake later sends
+        and invert delivery order (delivery remains timestamp-sorted; the
+        *timestamps* are scrambled)."""
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError("reorder rate must be in [0, 1]")
+        if spread < 0:
+            raise ValueError("reorder spread must be non-negative")
+        self.reorder_rate = float(rate)
+        self.reorder_spread = float(spread)
 
     def fail_node(self, node: str) -> None:
         self.down.add(node)
@@ -196,10 +319,14 @@ class SimNetwork:
         return sdc is not None and ddc is not None and sdc != ddc
 
     def reachable(self, a: str, b: str) -> bool:
+        """Can ``a`` currently get a message *to* ``b``?  Directional:
+        a cut ``(a, b)`` link blocks this way while ``(b, a)`` may flow."""
         if a in self.down or b in self.down:
             return False
         if a == b:
             return True
+        if (a, b) in self.link_cuts:
+            return False
         if self.partition_groups is None:
             return True
         for g in self.partition_groups:
@@ -218,12 +345,36 @@ class SimNetwork:
             return False
         base, jit = self._link_params(src, dst)
         latency = base + self.rng.random() * jit
+        # fault matrix: delay factors scale the drawn latency (slow-not-
+        # dead nodes); reorder adds fault-stream latency so this send can
+        # be overtaken by later ones.  Both are applied after the main RNG
+        # draw — with faults off, the arithmetic and the RNG stream are
+        # exactly the pre-fault fabric's.
+        if self.delay_factors:
+            latency *= (self.delay_factors.get(src, 1.0)
+                        * self.delay_factors.get(dst, 1.0))
+        if self.reorder_rate and self.fault_rng.random() < self.reorder_rate:
+            latency += self.fault_rng.random() * self.reorder_spread
+            self.reordered += 1
         self.queue.append(Message(src, dst, payload, self.now + latency))
         nbytes = payload_nbytes(payload)
         self.bytes_sent += nbytes
-        if self.is_wan(src, dst):
+        wan = self.is_wan(src, dst)
+        if wan:
             self.wan_messages += 1
             self.wan_bytes += nbytes
+        if self.dup_rate and self.fault_rng.random() < self.dup_rate:
+            dup_latency = base + self.fault_rng.random() * jit
+            if self.delay_factors:
+                dup_latency *= (self.delay_factors.get(src, 1.0)
+                                * self.delay_factors.get(dst, 1.0))
+            self.queue.append(
+                Message(src, dst, payload, self.now + dup_latency))
+            self.duplicated += 1
+            self.bytes_sent += nbytes       # duplicates cost real wire
+            if wan:
+                self.wan_messages += 1
+                self.wan_bytes += nbytes
         return True
 
     def deliver(self, handler: Callable[[Message], None],
@@ -253,6 +404,12 @@ class SimNetwork:
 
     def pending(self) -> int:
         return len(self.queue)
+
+    def queued_for(self, node: str) -> int:
+        """Messages queued toward ``node`` — the churn suite's leak probe:
+        after a control-loop eviction this must be zero (``forget`` purges
+        sends to a destination that no longer exists)."""
+        return sum(1 for m in self.queue if m.dst == node)
 
     # -- timers (simulated-clock scheduling) -----------------------------------
     def schedule(self, delay: float, callback: Callable[[], None]) -> int:

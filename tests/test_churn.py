@@ -25,8 +25,8 @@ import random
 import pytest
 
 from repro.core import DVV_MECHANISM
-from repro.store import (GossipDriver, KVCluster, SimNetwork, Unavailable,
-                         cluster_converged)
+from repro.store import (GossipDriver, KVCluster, MembershipController,
+                         SimNetwork, Unavailable, cluster_converged)
 
 pytestmark = pytest.mark.churn
 
@@ -39,14 +39,24 @@ MAX_NODES = 6
 # The schedule interpreter (shared by both backends and the fuzzer).
 # ---------------------------------------------------------------------------
 
-def _run_schedule(seed, ops, packed, quiesce=True, shards=1):
+def _run_schedule(seed, ops, packed, quiesce=True, shards=1,
+                  membership=False):
     """Interpret one churn schedule.  All choices are resolved against
     *current* membership (indices mod the live node list), so the same op
-    list is meaningful whatever the interleaving did to the cluster."""
+    list is meaningful whatever the interleaving did to the cluster.
+
+    ``membership=True`` attaches a ``MembershipController`` — the
+    self-driving loop then evicts/re-admits nodes on its own (schedules
+    exercising it use fault ops, never hand-called add/remove), and the
+    conformance helpers verify the membership *trajectory* is identical
+    across backends too.  The fault ops (``cut``/``heal_link``/``slow``/
+    ``dup``/``reorder``/``flap``) drive the SimNetwork fault matrix."""
     net = SimNetwork(seed=seed)
     c = KVCluster(BASE_NODES, DVV_MECHANISM, packed=packed, network=net,
                   seed=seed, shards=shards)
     driver = GossipDriver(c, period=6.0, seed=seed)
+    controller = MembershipController(c, period=6.0, seed=seed) \
+        if membership else None
     contexts = {}
     next_id = len(BASE_NODES)
     for t, op in enumerate(ops):
@@ -98,18 +108,56 @@ def _run_schedule(seed, ops, packed, quiesce=True, shards=1):
             driver.run_for(float(dt))
         elif kind == "deliver":
             c.deliver_replication()
+        elif kind == "cut":                      # one-directional link cut
+            _, i, j = op
+            a, b = nodes[i % len(nodes)], nodes[j % len(nodes)]
+            if a != b:
+                net.cut_link(a, b)
+        elif kind == "heal_link":
+            _, i, j = op
+            net.heal_link(nodes[i % len(nodes)], nodes[j % len(nodes)])
+        elif kind == "slow":                     # slow-not-dead node
+            _, ni, factor = op
+            net.set_delay_factor(nodes[ni % len(nodes)], float(factor))
+        elif kind == "dup":
+            _, rate = op
+            net.set_duplication(float(rate))
+        elif kind == "reorder":
+            _, rate = op
+            net.set_reorder(float(rate), spread=25.0)
+        elif kind == "flap":
+            _, i, j = op
+            a, b = nodes[i % len(nodes)], nodes[j % len(nodes)]
+            if a != b and len(net._flaps) < 2:   # bound concurrent flaps
+                net.flap_link(a, b, up_for=8.0, down_for=8.0)
         else:                                    # pragma: no cover
             raise AssertionError(op)
     if quiesce:
+        net.stop_flaps()
         net.heal()
         for n in list(net.down):
             net.recover_node(n)
+        for n in list(net.delay_factors):
+            net.set_delay_factor(n, 1.0)
+        net.set_duplication(0.0)
+        net.set_reorder(0.0)
         c.deliver_replication()
         driver.run_for(60.0 * len(c.nodes))
+        # slow-node stragglers may still be queued with due times past the
+        # run_for horizon; a second unbounded drain flushes them
+        c.deliver_replication()
         # belt and braces: bounded explicit rounds prove a fixpoint even
         # if the adaptive cadence backed off right before the deadline
         for _ in range(len(c.nodes) + 1):
             c.delta_antientropy_round()
+        # queue-leak probe (satellite bugfix): nothing may remain queued
+        # toward a node that is no longer a member — eviction must purge
+        assert all(m.dst in c.nodes for m in net.queue), \
+            [(m.src, m.dst) for m in net.queue if m.dst not in c.nodes]
+        if controller is not None:
+            # zero hand-called membership: after full heal + recovery the
+            # loop must have re-admitted every evicted node by itself
+            assert not controller.evicted_nodes(), controller.evicted_nodes()
     return c, driver
 
 
@@ -138,12 +186,21 @@ def _assert_backends_agree(cp, co, tag):
         assert gp.context == go.context, (tag, k)
 
 
-def _conformance(seed, ops, tag, shards=1):
-    cp, _ = _run_schedule(seed, ops, packed=True, shards=shards)
-    co, _ = _run_schedule(seed, ops, packed=False, shards=shards)
+def _conformance(seed, ops, tag, shards=1, membership=False):
+    cp, _ = _run_schedule(seed, ops, packed=True, shards=shards,
+                          membership=membership)
+    co, _ = _run_schedule(seed, ops, packed=False, shards=shards,
+                          membership=membership)
     _assert_replicas_agree(cp, ("packed", tag))
     _assert_replicas_agree(co, ("object", tag))
     _assert_backends_agree(cp, co, tag)
+    if membership:
+        # the self-driving loop's decisions are part of conformance: same
+        # probes, same evictions, same re-admissions on both backends
+        mp, mo = cp.membership, co.membership
+        assert (mp.probes, mp.evictions, mp.readmissions) == \
+            (mo.probes, mo.evictions, mo.readmissions), tag
+    return cp, co
 
 
 def _random_ops(seed, n_ops=40):
