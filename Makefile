@@ -10,7 +10,10 @@
 # phase); `test-geo` runs the geo-replication tier (DC topology, HLC
 # walls, causal snapshot plane, incl. its slow DC-partition fuzz phase);
 # `test-faults` runs the fault-injection matrix + self-driving membership
-# suite (pinned conformance lanes + the slow hypothesis phase).
+# suite (pinned conformance lanes + the slow hypothesis phase);
+# `test-durable` runs the segment-log durability suite (codec/segment
+# units, warm-restart conformance, the crash-point fuzz incl. its slow
+# every-extent sweep).
 # `bench-smoke` exercises the benchmark harness at toy
 # sizes; `bench-delta` runs the full divergence sweep and writes
 # BENCH_delta_sync.json; `bench-client` sweeps batched put_many/get_many vs
@@ -20,7 +23,9 @@
 # coalescing sweep and writes BENCH_serving.json; `bench-geo` runs the
 # geo tier sweep (snapshot latency, frontier staleness, WAN bytes) and
 # writes BENCH_geo.json; `bench-faults` runs the detection-latency and
-# flapping-wire-cost lanes and writes BENCH_faults.json; `lint` is a
+# flapping-wire-cost lanes and writes BENCH_faults.json; `bench-durable`
+# runs the warm-vs-cold recovery and log-overhead lanes and writes
+# BENCH_durable.json; `lint` is a
 # dependency-free syntax/bytecode pass (the container has no flake8/ruff
 # baked in).
 
@@ -28,9 +33,9 @@ PY := python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-all test-property test-churn test-read test-shard \
-	test-serving test-geo test-faults bench-smoke bench bench-delta \
-	bench-client bench-churn bench-read bench-shard bench-serving \
-	bench-geo bench-faults lint check
+	test-serving test-geo test-faults test-durable bench-smoke bench \
+	bench-delta bench-client bench-churn bench-read bench-shard \
+	bench-serving bench-geo bench-faults bench-durable lint check
 
 test:
 	$(PY) -m pytest -x -q
@@ -59,6 +64,9 @@ test-geo:
 test-faults:
 	$(PY) -m pytest -q -m faults
 
+test-durable:
+	$(PY) -m pytest -q -m durable
+
 bench-smoke:
 	$(PY) -c "from benchmarks.kernel_bench import bulk_sync_rows; \
 	          print('\n'.join(bulk_sync_rows((256,), json_path=None, reps=1)))"
@@ -75,6 +83,8 @@ bench-smoke:
 	$(PY) -c "from benchmarks.geo_bench import rows; \
 	          print('\n'.join(rows()))"
 	$(PY) -c "from benchmarks.faults_bench import rows; \
+	          print('\n'.join(rows()))"
+	$(PY) -c "from benchmarks.durable_bench import rows; \
 	          print('\n'.join(rows()))"
 
 bench:
@@ -105,6 +115,9 @@ bench-geo:
 
 bench-faults:
 	$(PY) -m benchmarks.faults_bench
+
+bench-durable:
+	$(PY) -m benchmarks.durable_bench
 
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples

@@ -53,9 +53,9 @@ def _merge_smoke(json_path: str, rows: list) -> None:
 
 
 def main() -> None:
-    from . import churn_bench, client_bench, delta_bench, faults_bench, \
-        geo_bench, kernel_bench, paper_figures, read_bench, scalability, \
-        serving_bench, shard_bench
+    from . import churn_bench, client_bench, delta_bench, durable_bench, \
+        faults_bench, geo_bench, kernel_bench, paper_figures, read_bench, \
+        scalability, serving_bench, shard_bench
 
     # (module, BENCH json its full sweep owns — None: prints rows only)
     targets = [
@@ -70,6 +70,7 @@ def main() -> None:
         (serving_bench, "BENCH_serving.json"),
         (geo_bench, "BENCH_geo.json"),
         (faults_bench, "BENCH_faults.json"),
+        (durable_bench, "BENCH_durable.json"),
     ]
 
     rows = []

@@ -15,13 +15,18 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Dict, FrozenSet, Optional, Tuple
+from typing import Dict, FrozenSet, Optional, TYPE_CHECKING, Tuple
 
 import numpy as np
 
-from ..store import KVCluster, Unavailable
+# Submodule imports (not the repro.store package) so the store's durable
+# log can depend on ckpt helpers without an import cycle.
+from ..store.network import Unavailable
 from .manifest import Manifest, resolve_manifest_siblings
 from .shards import load_tree, save_tree
+
+if TYPE_CHECKING:
+    from ..store.cluster import KVCluster
 
 
 def _manifest_key(run_id: str) -> str:

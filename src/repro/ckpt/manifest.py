@@ -20,6 +20,15 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
 
+def content_checksum(data: bytes) -> str:
+    """The integrity stamp shared by shard blobs and WAL artifacts.
+
+    16 hex chars of sha256 — short enough to live inline in manifests,
+    long enough that a torn or corrupted blob cannot collide in practice.
+    """
+    return hashlib.sha256(data).hexdigest()[:16]
+
+
 @dataclass(frozen=True)
 class ShardRecord:
     path: str           # logical parameter path, e.g. "layers/attn/wq"
@@ -67,7 +76,7 @@ class Manifest:
             writer=d["writer"], parent_checksum=d["parent_checksum"])
 
     def checksum(self) -> str:
-        return hashlib.sha256(self.serialize().encode()).hexdigest()[:16]
+        return content_checksum(self.serialize().encode())
 
 
 def resolve_manifest_siblings(manifests: Tuple[Manifest, ...]) -> Manifest:

@@ -8,13 +8,14 @@ manager falls back to the parent lineage.
 """
 from __future__ import annotations
 
-import hashlib
+import io
 import os
 from typing import Dict, Tuple
 
 import numpy as np
 
-from .manifest import ShardRecord
+from .atomic import atomic_write_bytes
+from .manifest import ShardRecord, content_checksum
 
 
 def _blob_name(run_id: str, step: int, path: str, writer: str) -> str:
@@ -32,9 +33,13 @@ def save_array(root: str, run_id: str, step: int, path: str,
     fname = _blob_name(run_id, step, path, writer)
     full = os.path.join(root, fname)
     value = np.asarray(value)
-    with open(full, "wb") as f:
-        np.save(f, value)
-    checksum = hashlib.sha256(value.tobytes()).hexdigest()[:16]
+    # Serialize in memory, then temp → fsync → rename: a crash mid-save
+    # leaves either no blob or the complete blob, never a torn .npy that a
+    # later manifest could reference.
+    buf = io.BytesIO()
+    np.save(buf, value)
+    atomic_write_bytes(full, buf.getvalue())
+    checksum = content_checksum(value.tobytes())
     return ShardRecord(path=path, file=fname, shape=tuple(value.shape),
                        dtype=str(value.dtype), checksum=checksum)
 
@@ -46,7 +51,7 @@ def load_array(root: str, record: ShardRecord, *,
     if tuple(value.shape) != tuple(record.shape) or str(value.dtype) != record.dtype:
         raise IOError(f"shard {record.file}: shape/dtype mismatch vs manifest")
     if verify:
-        checksum = hashlib.sha256(value.tobytes()).hexdigest()[:16]
+        checksum = content_checksum(value.tobytes())
         if checksum != record.checksum:
             raise IOError(f"shard {record.file}: checksum mismatch (torn write?)")
     return value

@@ -11,7 +11,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from .membership import MemberView
+from ..store.services import MemberView
 
 
 @dataclass(frozen=True)

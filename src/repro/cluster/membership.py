@@ -1,120 +1,11 @@
-"""DVV-backed cluster membership.
-
-Membership is a map ``node_id -> (status, epoch)`` stored as a single key in
-the replicated store.  Elastic scale-up/down means *concurrent* membership
-writes through different coordinators — exactly the workload where a
-per-server version vector linearizes concurrent joins (paper §3.2) and LWW
-drops one (paper §3.1).  With DVV the divergent views surface as siblings
-and are merged with a deterministic join (pointwise max epoch, status
-priority), then written back with the full context so the merge dominates
-both branches.
+"""Compat shim: the DVV-backed membership ledger was promoted to the store
+plane (``repro.store.services``), alongside the §13 liveness controller it
+complements.  The training-sim runtime keeps importing it from here; new
+code should import from ``repro.store``.
 """
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass
-from enum import IntEnum
-from typing import Dict, FrozenSet, Optional, Tuple
+from ..store.services import MEMBERSHIP_KEY, MemberView, MembershipService, \
+    NodeStatus
 
-from ..store import KVCluster, Unavailable
-
-MEMBERSHIP_KEY = "cluster/membership"
-
-
-class NodeStatus(IntEnum):
-    # ordered by reconciliation priority at equal epoch: dead > leaving > alive
-    ALIVE = 0
-    LEAVING = 1
-    DEAD = 2
-
-
-@dataclass(frozen=True)
-class MemberView:
-    """Immutable membership snapshot."""
-
-    members: Tuple[Tuple[str, Tuple[int, int]], ...] = ()  # (node, (status, epoch))
-
-    @staticmethod
-    def from_dict(d: Dict[str, Tuple[int, int]]) -> "MemberView":
-        return MemberView(tuple(sorted(d.items())))
-
-    def to_dict(self) -> Dict[str, Tuple[int, int]]:
-        return {k: tuple(v) for k, v in self.members}
-
-    def serialize(self) -> str:
-        return json.dumps(self.members, sort_keys=True)
-
-    @staticmethod
-    def deserialize(s: str) -> "MemberView":
-        raw = json.loads(s)
-        return MemberView(tuple((n, tuple(v)) for n, v in raw))
-
-    def alive(self) -> Tuple[str, ...]:
-        return tuple(n for n, (s, _) in self.members
-                     if s == NodeStatus.ALIVE)
-
-    @staticmethod
-    def merge(views: "Tuple[MemberView, ...]") -> "MemberView":
-        """Deterministic join of divergent sibling views."""
-        out: Dict[str, Tuple[int, int]] = {}
-        for view in views:
-            for node, (status, epoch) in view.members:
-                if node not in out:
-                    out[node] = (status, epoch)
-                else:
-                    s0, e0 = out[node]
-                    # higher epoch wins; at equal epoch the more terminal
-                    # status wins (a node seen dead stays dead until it
-                    # rejoins with a higher epoch)
-                    if (epoch, status) > (e0, s0):
-                        out[node] = (status, epoch)
-        return MemberView.from_dict(out)
-
-
-class MembershipService:
-    """Client-side membership operations against the replicated store."""
-
-    def __init__(self, store: KVCluster, self_id: str):
-        self.store = store
-        self.self_id = self_id
-
-    def _read(self, via: Optional[str] = None):
-        try:
-            res = self.store.get(MEMBERSHIP_KEY, via=via or self.self_id)
-        except (Unavailable, KeyError):
-            return MemberView(), frozenset()
-        if not res.values:
-            return MemberView(), res.context
-        views = tuple(MemberView.deserialize(v) for v in res.values)
-        return MemberView.merge(views), res.context
-
-    def view(self, via: Optional[str] = None) -> MemberView:
-        return self._read(via)[0]
-
-    def _transition(self, node: str, status: NodeStatus,
-                    via: Optional[str] = None, bump_epoch: bool = True) -> MemberView:
-        view, ctx = self._read(via)
-        d = view.to_dict()
-        _, epoch = d.get(node, (NodeStatus.ALIVE, -1))
-        d[node] = (int(status), epoch + 1 if bump_epoch else epoch)
-        new = MemberView.from_dict(d)
-        self.store.put(MEMBERSHIP_KEY, new.serialize(), context=ctx,
-                       via=via or self.self_id, client_id=self.self_id)
-        return new
-
-    def join(self, node: Optional[str] = None, via: Optional[str] = None):
-        return self._transition(node or self.self_id, NodeStatus.ALIVE, via)
-
-    def leave(self, node: Optional[str] = None, via: Optional[str] = None):
-        return self._transition(node or self.self_id, NodeStatus.LEAVING, via)
-
-    def mark_dead(self, node: str, via: Optional[str] = None):
-        return self._transition(node, NodeStatus.DEAD, via)
-
-    def reconcile(self, via: Optional[str] = None) -> MemberView:
-        """Merge any sibling views and persist the join (reader-repair)."""
-        view, ctx = self._read(via)
-        if ctx:
-            self.store.put(MEMBERSHIP_KEY, view.serialize(), context=ctx,
-                           via=via or self.self_id, client_id=self.self_id)
-        return view
+__all__ = ["MEMBERSHIP_KEY", "MemberView", "MembershipService", "NodeStatus"]

@@ -1,103 +1,9 @@
-"""Straggler mitigation: a DVV-backed work-stealing ledger.
-
-Data shards (or microbatch ranges, eval jobs, compile tasks...) are leased
-through the replicated store.  Two workers claiming the same shard through
-the *same* coordinator is precisely the paper's Fig. 3 same-server
-concurrency: with per-server version vectors one claim silently overwrites
-the other and both workers think they own the shard (duplicated work, or
-worse, double-applied updates).  With DVV both claims surface as siblings
-and the deterministic resolver picks one winner; the loser observes it lost
-and moves on.
+"""Compat shim: the DVV-backed work-stealing lease ledger was promoted to
+the store plane (``repro.store.services``).  The training-sim runtime keeps
+importing it from here; new code should import from ``repro.store``.
 """
 from __future__ import annotations
 
-import json
-from dataclasses import dataclass
-from typing import FrozenSet, Optional, Tuple
+from ..store.services import Lease, WorkStealer, resolve_lease_siblings
 
-from ..store import KVCluster, Unavailable
-
-
-def _lease_key(shard: str) -> str:
-    return f"lease/{shard}"
-
-
-@dataclass(frozen=True)
-class Lease:
-    shard: str
-    owner: str
-    expires: float
-    attempt: int
-
-    def serialize(self) -> str:
-        return json.dumps({"shard": self.shard, "owner": self.owner,
-                           "expires": self.expires, "attempt": self.attempt})
-
-    @staticmethod
-    def deserialize(s: str) -> "Lease":
-        return Lease(**json.loads(s))
-
-
-def resolve_lease_siblings(leases: Tuple[Lease, ...]) -> Lease:
-    """Deterministic winner among concurrent claims: highest attempt, then
-    latest expiry, then lowest owner id (total, schedule-independent)."""
-    return sorted(leases,
-                  key=lambda l: (-l.attempt, -l.expires, l.owner))[0]
-
-
-class WorkStealer:
-    def __init__(self, store: KVCluster, worker_id: str,
-                 lease_duration: float = 10.0):
-        self.store = store
-        self.worker_id = worker_id
-        self.lease_duration = lease_duration
-
-    def _read(self, shard: str, via: Optional[str] = None):
-        try:
-            res = self.store.get(_lease_key(shard), via=via)
-        except Unavailable:
-            return None, frozenset()
-        if not res.values:
-            return None, res.context
-        leases = tuple(Lease.deserialize(v) for v in res.values)
-        return resolve_lease_siblings(leases), res.context
-
-    def try_claim(self, shard: str, now: float,
-                  via: Optional[str] = None) -> bool:
-        """Attempt to lease ``shard``.  Returns True iff after the write this
-        worker is the resolved owner (the claim may race; we re-read)."""
-        current, ctx = self._read(shard, via=via)
-        if current is not None and current.owner != self.worker_id \
-                and current.expires > now:
-            return False  # actively held by someone else
-        attempt = (current.attempt + 1) if current else 0
-        lease = Lease(shard, self.worker_id, now + self.lease_duration, attempt)
-        try:
-            self.store.put(_lease_key(shard), lease.serialize(), context=ctx,
-                           via=via, client_id=self.worker_id)
-        except Unavailable:
-            return False
-        resolved, _ = self._read(shard, via=via)
-        return resolved is not None and resolved.owner == self.worker_id
-
-    def renew(self, shard: str, now: float, via: Optional[str] = None) -> bool:
-        current, ctx = self._read(shard, via=via)
-        if current is None or current.owner != self.worker_id:
-            return False
-        lease = Lease(shard, self.worker_id, now + self.lease_duration,
-                      current.attempt)
-        self.store.put(_lease_key(shard), lease.serialize(), context=ctx,
-                       via=via, client_id=self.worker_id)
-        return True
-
-    def owner(self, shard: str, via: Optional[str] = None) -> Optional[str]:
-        lease, _ = self._read(shard, via=via)
-        return lease.owner if lease else None
-
-    def steal_expired(self, shard: str, now: float,
-                      via: Optional[str] = None) -> bool:
-        """Straggler mitigation: take over a shard whose lease lapsed."""
-        current, _ = self._read(shard, via=via)
-        if current is None or current.expires > now:
-            return False
-        return self.try_claim(shard, now, via=via)
+__all__ = ["Lease", "WorkStealer", "resolve_lease_siblings"]

@@ -11,10 +11,14 @@ from .packed import MergedRead, PackedPayload, PackedVersionStore, \
     StoreDigest, concat_payloads, key_bucket, quorum_merge_many, \
     split_payload
 from .replica import ReplicaNode
+from .services import MEMBERSHIP_KEY, Lease, MemberView, MembershipService, \
+    NodeStatus, WorkStealer, resolve_lease_siblings
 from .serving import ClosedLoopEngine, OpScheduler, PendingOp
 from .sharding import HashRing, key_hash64, shard_of_key
 from .version import HybridClock, Version, clocks_of, hlc_decode, \
     hlc_encode, sync_versions, values_of
+from .wal import CrashFS, CrashPoint, DurableLog, LocalFS, ReplayStats, \
+    SegmentLog
 
 __all__ = [
     "KVCluster", "KVClient", "GetResult", "PutAck",
@@ -30,4 +34,8 @@ __all__ = [
     "StoreDigest", "DeltaSyncStats", "delta_antientropy", "key_bucket",
     "HashRing", "key_hash64", "shard_of_key",
     "concat_payloads", "split_payload",
+    "DurableLog", "SegmentLog", "ReplayStats",
+    "LocalFS", "CrashFS", "CrashPoint",
+    "MembershipService", "MemberView", "NodeStatus", "MEMBERSHIP_KEY",
+    "WorkStealer", "Lease", "resolve_lease_siblings",
 ]

@@ -34,6 +34,7 @@ from .replica import ReplicaNode
 from .sharding import DEFAULT_PLACEMENT_SLICES, DEFAULT_VNODES, HashRing, \
     key_hash64, moved_shards, owned_shards, shard_of_key
 from .version import HybridClock, Version, clocks_of, sync_versions
+from .wal import DurableLog, LocalFS, ReplayStats
 
 #: Default per-push range budget when gossip fanout sampling is active
 #: (`delta_antientropy_round(fanout=...)`); caps a single round's payload
@@ -158,7 +159,11 @@ class KVCluster:
                  delta_range_budget: int = DELTA_RANGE_BUDGET,
                  shards: int = 1, vnodes: int = DEFAULT_VNODES,
                  datacenters: Optional[Mapping[str, Sequence[str]]] = None,
-                 wan_period: float = 25.0):
+                 wan_period: float = 25.0,
+                 wal_dir: Optional[str] = None,
+                 wal_snapshot_every: int = 64,
+                 wal_seal_bytes: int = 1 << 15,
+                 wal_fs: Optional[Mapping[str, LocalFS]] = None):
         if not node_ids:
             raise ValueError("need at least one node")
         if shards < 1 or shards & (shards - 1):
@@ -231,8 +236,129 @@ class KVCluster:
         # None (the default) every path below is byte-identical to the
         # hand-managed cluster.
         self.membership = None
+        # Durability tier (DESIGN.md §14): with ``wal_dir`` set, every node
+        # appends post-state records to per-shard segment logs under
+        # ``wal_dir/<node>/shard-NN/`` and can come back warm via
+        # ``restart_node``.  ``wal_dir=None`` (the default) leaves every
+        # hook unset — byte-identical to the in-memory cluster.
+        # ``incarnation`` counts process lifetimes per node id (bumped on
+        # join and on every restart) so listeners like the gossip driver
+        # can tell a restarted process from a surviving one.
+        self.wal_dir = wal_dir
+        self.wal: Dict[str, DurableLog] = {}
+        self._wal_cfg = dict(snapshot_every=wal_snapshot_every,
+                             seal_bytes=wal_seal_bytes)
+        self._wal_fs = wal_fs or {}
+        #: ReplayStats of the most recent ``restart_node`` (bench surface).
+        self.last_replay: Optional[ReplayStats] = None
+        self._epoch = 0
+        self.incarnation: Dict[str, int] = {n: 1 for n in node_ids}
+        if wal_dir is not None:
+            if self.geo is not None:
+                raise ValueError("durable logs are not supported on a geo "
+                                 "cluster (membership there is static)")
+            for n in node_ids:
+                self._wal_attach(n)
+            self._bump_epoch()
+
+    # -- durability (DESIGN.md §14) -------------------------------------------
+    def _wal_attach(self, node_id: str, *, reset: bool = False) -> None:
+        log = self.wal.get(node_id)
+        if log is None:
+            log = self.wal[node_id] = DurableLog(
+                self.wal_dir, node_id, fs=self._wal_fs.get(node_id),
+                **self._wal_cfg)
+        if reset:
+            log.reset()
+        log.attach(self.nodes[node_id])
+
+    def _bump_epoch(self) -> None:
+        """Stamp a new membership epoch into every attached node's log."""
+        self._epoch += 1
+        members = tuple(sorted(self.nodes))
+        for node_id, log in self.wal.items():
+            if log.node is not None:
+                log.log_epoch(self._epoch, members)
+
+    def restart_node(self, node_id: str, *,
+                     use_kernel: bool = False) -> List[DeltaSyncStats]:
+        """Warm restart from the durable log (the §14 recovery protocol).
+
+        The crashed process's replica object is discarded and a fresh one
+        is rebuilt from disk: reopen the shard manifests, truncate any
+        torn tail (checksum-gated), replay snapshot + tail into packed
+        columns / object sets (digest trees rebuild incrementally as the
+        replay applies), then run exactly ONE digest-diffed delta pass per
+        reachable peer — a pull (what the cluster wrote while this node
+        was down) and a push (what this node coordinated or received but
+        never finished replicating; the log keeps such writes alive even
+        when the crash preempted their replication sends).  Both
+        directions are O(divergence), not the O(store) ``bootstrap_node``
+        path.  A node evicted by the MembershipController rejoins the
+        ring here without a fresh-join bootstrap (warm readmit).
+        """
+        if self.geo is not None:
+            raise ValueError("restart_node requires a non-geo cluster")
+        log = self.wal.get(node_id)
+        if log is None:
+            raise ValueError(
+                f"node {node_id!r} has no durable log (wal_dir unset)")
+        if node_id in self.nodes:
+            # In-place process bounce: same ring tokens and placement, new
+            # replica object (the old process's memory is gone).
+            self.nodes[node_id] = ReplicaNode(
+                node_id, self.mechanism, packed=self._packed,
+                shards=self.shards)
+            self.hlc[node_id] = HybridClock()
+            self.incarnation[node_id] = \
+                self.incarnation.get(node_id, 0) + 1
+        else:
+            # Post-eviction readmit: rejoin ring + placement, no bootstrap.
+            self._admit_node(node_id)
+        self.last_replay = log.restore_into(self.nodes[node_id])
+        if node_id in self.network.down:
+            self.network.recover_node(node_id)
+        else:
+            self.network._topology_changed()
+        self._bump_epoch()
+        only = self._sync_shards(node_id)
+        stats: List[DeltaSyncStats] = []
+        for peer in list(self.nodes):
+            if peer == node_id or \
+                    not self.network.reachable(peer, node_id):
+                continue
+            # Sync only shards BOTH sides own: a peer outside shard s's
+            # replica set holds nothing to pull, and pushing to it would
+            # ship this node's whole shard into a store that doesn't own
+            # it — O(store) wire for zero durability.
+            pair = only
+            if only is not None:
+                peer_owned = self._owned.get(peer)
+                if peer_owned is not None:
+                    pair = only & peer_owned
+                if not pair:
+                    continue
+            stats.append(self.delta_antientropy(
+                peer, node_id, use_kernel=use_kernel, only_shards=pair))
+            stats.append(self.delta_antientropy(
+                node_id, peer, use_kernel=use_kernel, only_shards=pair))
+        return stats
 
     # -- membership (dynamic: nodes join and leave at runtime) ----------------
+    def _admit_node(self, node_id: str) -> None:
+        """Shared join mechanics: replica + clock + ring + placement +
+        topology event (no bootstrap, no durable-log reset)."""
+        self.nodes[node_id] = ReplicaNode(node_id, self.mechanism,
+                                          packed=self._packed,
+                                          shards=self.shards)
+        self.hlc[node_id] = HybridClock()
+        self.incarnation[node_id] = self.incarnation.get(node_id, 0) + 1
+        self._ring.add(node_id)
+        self._rebuild_placement()
+        # a join is a topology change too: listeners (the gossip driver)
+        # adopt the newcomer immediately instead of on their next fire
+        self.network._topology_changed()
+
     def add_node(self, node_id: str, *, bootstrap: bool = True,
                  bootstrap_ranges: Optional[int] = None,
                  use_kernel: bool = False) -> List[DeltaSyncStats]:
@@ -253,15 +379,13 @@ class KVCluster:
                              "geo cluster (mirror placement is static)")
         if node_id in self.nodes:
             raise ValueError(f"node {node_id!r} already in cluster")
-        self.nodes[node_id] = ReplicaNode(node_id, self.mechanism,
-                                          packed=self._packed,
-                                          shards=self.shards)
-        self.hlc[node_id] = HybridClock()
-        self._ring.add(node_id)
-        self._rebuild_placement()
-        # a join is a topology change too: listeners (the gossip driver)
-        # adopt the newcomer immediately instead of on their next fire
-        self.network._topology_changed()
+        self._admit_node(node_id)
+        if self.wal_dir is not None:
+            # A *fresh* join wipes any log a previous incarnation of this
+            # id left behind (its pre-departure state must not resurrect);
+            # warm rejoins go through ``restart_node`` instead.
+            self._wal_attach(node_id, reset=True)
+            self._bump_epoch()
         if bootstrap:
             return self.bootstrap_node(node_id, max_ranges=bootstrap_ranges,
                                        use_kernel=use_kernel)
@@ -314,6 +438,13 @@ class KVCluster:
         self._owned.pop(node_id, None)
         self._node_gossip_step.pop(node_id, None)
         self.network.forget(node_id)
+        if (log := self.wal.get(node_id)) is not None:
+            # Keep the DurableLog object (and its files): a later
+            # ``restart_node`` readmits warm from it; a later fresh
+            # ``add_node`` wipes it.
+            log.detach()
+        if self.wal_dir is not None:
+            self._bump_epoch()
         return stats
 
     def bootstrap_node(self, node_id: str, *,

@@ -326,10 +326,18 @@ class MembershipController:
 
     def _readmit(self, node: str) -> None:
         del self._evicted[node]
-        # warm re-entry: placement rehash + ranked digest-diffed bootstrap
-        # pulls (only the shards it owns, on a sharded cluster)
-        self.cluster.add_node(node, bootstrap=True,
-                              bootstrap_ranges=self.bootstrap_ranges)
+        if node in getattr(self.cluster, "wal", {}):
+            # Durable-log recovery (DESIGN.md §14): the evicted node left a
+            # segment log behind, so it rejoins *warm* — replay snapshot +
+            # tail from disk, then one digest-diffed delta round for what
+            # it missed — instead of paying the O(store) bootstrap.
+            self.cluster.restart_node(node)
+        else:
+            # warm re-entry: placement rehash + ranked digest-diffed
+            # bootstrap pulls (only the shards it owns, on a sharded
+            # cluster)
+            self.cluster.add_node(node, bootstrap=True,
+                                  bootstrap_ranges=self.bootstrap_ranges)
         self.readmissions += 1
 
     # -- suspicion surface (the data-plane hooks) --------------------------

@@ -56,6 +56,7 @@ class NodeGossip:
     fire_at: float = 0.0          # when that timer is due
     ticks: int = 0
     idle_ticks: int = 0           # consecutive all-converged ticks
+    incarnation: int = 0          # process lifetime this state belongs to
     # Sharded clusters: per-shard budget overrides for shards whose rounds
     # saturated — a hot shard ramps alone, cold shards keep the base
     # budget, and idle ticks decay entries back out of the map.
@@ -160,18 +161,33 @@ class GossipDriver:
         how joiners enter the loop without the cluster knowing about us —
         and prune state of departed nodes (normally their own fire
         self-prunes, but a removal while the driver is stopped leaves a
-        stale disarmed entry that would shadow a later re-join)."""
+        stale disarmed entry that would shadow a later re-join).
+
+        State is also re-seeded when a node's *incarnation* changed — a
+        warm restart (or a remove + re-add the driver never witnessed)
+        means the adapted cadence/budgets and consumed jitter stream died
+        with the old process; carrying them over would give the new
+        process another process's schedule."""
+        incarnation = getattr(self.cluster, "incarnation", {})
         for node in [n for n in self._state
                      if n not in self.cluster.nodes]:
             st = self._state.pop(node)
             if st.timer is not None:
                 self.cluster.network.cancel(st.timer)
         for node in self.cluster.nodes:
-            if node not in self._state:
+            inc = incarnation.get(node, 0)
+            st = self._state.get(node)
+            if st is not None and st.incarnation != inc:
+                if st.timer is not None:
+                    self.cluster.network.cancel(st.timer)
+                self._state.pop(node)
+                st = None
+            if st is None:
                 self._state[node] = NodeGossip(
                     interval=self.period, fanout=self.fanout,
                     max_ranges=self.base_ranges,
-                    rng=random.Random(f"{self.seed}:{node}"))
+                    rng=random.Random(f"{self.seed}:{node}"),
+                    incarnation=inc)
                 self._arm(node)
 
     def _arm(self, node: str, interval: Optional[float] = None) -> None:

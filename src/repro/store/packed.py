@@ -379,6 +379,12 @@ class PackedVersionStore:
         self.max_wall = 0.0
         self.shadow_hook: Optional[Callable[
             [str, FrozenSet[Version]], None]] = None
+        # durability tier (DESIGN.md §14): ``wal_hook(payload)`` fires after
+        # every committed mutation with the *post-state* of the changed keys
+        # (a per-key PackedPayload).  Store evolution is monotone in the
+        # version-set lattice, so replaying these post-states in order
+        # reconstructs the exact final sets — the last record per key wins.
+        self.wal_hook: Optional[Callable[["PackedPayload"], None]] = None
 
     # -- interning / growth ------------------------------------------------
 
@@ -841,6 +847,8 @@ class PackedVersionStore:
             self.shadow_hook(key, before)
         self.compact()
         self._maybe_grow_buckets()
+        if changed and self.wal_hook is not None:
+            self.wal_hook(self.payload(keys=(key,)))
         return changed
 
     def sync_key_objects(self, key: str, versions: Iterable[Version]) -> bool:
@@ -1168,6 +1176,10 @@ class PackedVersionStore:
                     self.shadow_hook(self.keys[int(key_ixs[int(g)])], bs)
         self.compact()
         self._maybe_grow_buckets()
+        if self.wal_hook is not None and changed_groups.any():
+            changed_keys = [self.keys[int(key_ixs[int(g)])]
+                            for g in np.flatnonzero(changed_groups)]
+            self.wal_hook(self.payload(keys=changed_keys))
         return int(changed_groups.sum())
 
     # -- misc ---------------------------------------------------------------

@@ -43,6 +43,10 @@ class ObjectBackend:
         # retention is backend-agnostic (packed==object conformance).
         self.max_wall = 0.0
         self.shadow_hook = None
+        # durability tier (DESIGN.md §14): ``wal_hook(key, merged)`` fires
+        # with the committed post-state whenever a key's set changes — the
+        # object-backend mirror of ``PackedVersionStore.wal_hook``.
+        self.wal_hook = None
 
     def versions(self, key: str) -> FrozenSet[Version]:
         return self.store.get(key, frozenset())
@@ -56,6 +60,8 @@ class ObjectBackend:
                 self.max_wall = top
         if self.shadow_hook is not None and before and merged != before:
             self.shadow_hook(key, before)
+        if self.wal_hook is not None and merged != before:
+            self.wal_hook(key, merged)
 
     def apply_sync(self, key: str, incoming: FrozenSet[Version]
                    ) -> FrozenSet[Version]:

@@ -21,6 +21,8 @@ test-churn`` lane is its dedicated home) fuzzes schedules; a few pinned
 seeds run in tier-1 so the machinery never rots unexercised.
 """
 import random
+import shutil
+import tempfile
 
 import pytest
 
@@ -40,7 +42,7 @@ MAX_NODES = 6
 # ---------------------------------------------------------------------------
 
 def _run_schedule(seed, ops, packed, quiesce=True, shards=1,
-                  membership=False):
+                  membership=False, wal_dir=None):
     """Interpret one churn schedule.  All choices are resolved against
     *current* membership (indices mod the live node list), so the same op
     list is meaningful whatever the interleaving did to the cluster.
@@ -50,10 +52,17 @@ def _run_schedule(seed, ops, packed, quiesce=True, shards=1,
     exercising it use fault ops, never hand-called add/remove), and the
     conformance helpers verify the membership *trajectory* is identical
     across backends too.  The fault ops (``cut``/``heal_link``/``slow``/
-    ``dup``/``reorder``/``flap``) drive the SimNetwork fault matrix."""
+    ``dup``/``reorder``/``flap``) drive the SimNetwork fault matrix.
+
+    ``wal_dir`` turns on the durable segment logs (small snapshot/seal
+    knobs so schedules cross many snapshot and seal boundaries) and
+    enables the ``crash_restart`` op: discard a node's process state and
+    rebuild it warm from disk mid-schedule (DESIGN.md §14)."""
     net = SimNetwork(seed=seed)
+    wal_kwargs = {} if wal_dir is None else dict(
+        wal_dir=wal_dir, wal_snapshot_every=6, wal_seal_bytes=2048)
     c = KVCluster(BASE_NODES, DVV_MECHANISM, packed=packed, network=net,
-                  seed=seed, shards=shards)
+                  seed=seed, shards=shards, **wal_kwargs)
     driver = GossipDriver(c, period=6.0, seed=seed)
     controller = MembershipController(c, period=6.0, seed=seed) \
         if membership else None
@@ -130,6 +139,14 @@ def _run_schedule(seed, ops, packed, quiesce=True, shards=1,
             a, b = nodes[i % len(nodes)], nodes[j % len(nodes)]
             if a != b and len(net._flaps) < 2:   # bound concurrent flaps
                 net.flap_link(a, b, up_for=8.0, down_for=8.0)
+        elif kind == "crash_restart":
+            # process crash + immediate warm restart from the durable log
+            # (the old replica object is discarded, so any state the log
+            # failed to carry would be *observably* lost here)
+            _, ni = op
+            node = nodes[ni % len(nodes)]
+            if wal_dir is not None and node in c.wal:
+                c.restart_node(node)
         else:                                    # pragma: no cover
             raise AssertionError(op)
     if quiesce:
@@ -186,21 +203,36 @@ def _assert_backends_agree(cp, co, tag):
         assert gp.context == go.context, (tag, k)
 
 
-def _conformance(seed, ops, tag, shards=1, membership=False):
-    cp, _ = _run_schedule(seed, ops, packed=True, shards=shards,
-                          membership=membership)
-    co, _ = _run_schedule(seed, ops, packed=False, shards=shards,
-                          membership=membership)
-    _assert_replicas_agree(cp, ("packed", tag))
-    _assert_replicas_agree(co, ("object", tag))
-    _assert_backends_agree(cp, co, tag)
-    if membership:
-        # the self-driving loop's decisions are part of conformance: same
-        # probes, same evictions, same re-admissions on both backends
-        mp, mo = cp.membership, co.membership
-        assert (mp.probes, mp.evictions, mp.readmissions) == \
-            (mo.probes, mo.evictions, mo.readmissions), tag
-    return cp, co
+def _conformance(seed, ops, tag, shards=1, membership=False, wal=False):
+    tmp = tempfile.mkdtemp(prefix="churnwal-") if wal else None
+    try:
+        cp, _ = _run_schedule(
+            seed, ops, packed=True, shards=shards, membership=membership,
+            wal_dir=tmp and f"{tmp}/packed")
+        co, _ = _run_schedule(
+            seed, ops, packed=False, shards=shards, membership=membership,
+            wal_dir=tmp and f"{tmp}/object")
+        _assert_replicas_agree(cp, ("packed", tag))
+        _assert_replicas_agree(co, ("object", tag))
+        _assert_backends_agree(cp, co, tag)
+        if membership:
+            # the self-driving loop's decisions are part of conformance:
+            # same probes, same evictions, same re-admissions on both
+            # backends
+            mp, mo = cp.membership, co.membership
+            assert (mp.probes, mp.evictions, mp.readmissions) == \
+                (mo.probes, mo.evictions, mo.readmissions), tag
+        if wal:
+            # every packed store must come out of replay + catch-up with
+            # coherent digest trees and bucket indexes
+            for n in cp.nodes.values():
+                for st in n.shard_stores:
+                    assert st.check_digests(), tag
+                    assert st.check_bucket_index(), tag
+        return cp, co
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
 
 
 def _random_ops(seed, n_ops=40):
@@ -248,6 +280,69 @@ def test_churn_conformance_pinned_sharded(seed):
     must leave the sharded stores observationally identical to the
     single-dict object backend."""
     _conformance(seed, _random_ops(seed), ("sharded", seed), shards=4)
+
+
+def _random_durable_ops(seed, n_ops=36):
+    """Churn ops with warm restarts in the mix: crashes land between
+    partitions, failures and membership changes, so replay + one-delta-pass
+    recovery is exercised against every kind of concurrent divergence."""
+    rng = random.Random(f"durable:{seed}")
+    ops = []
+    for _ in range(n_ops):
+        p = rng.random()
+        if p < 0.34:
+            ops.append(("put", rng.randrange(8), rng.randrange(8),
+                        rng.random() < 0.5))
+        elif p < 0.46:
+            ops.append(("get", rng.randrange(8), rng.randrange(8)))
+        elif p < 0.54:
+            ops.append(("crash_restart", rng.randrange(8)))
+        elif p < 0.61:
+            ops.append(("partition", rng.randrange(1, 6)))
+        elif p < 0.66:
+            ops.append(("heal",))
+        elif p < 0.71:
+            ops.append(("fail", rng.randrange(8)))
+        elif p < 0.76:
+            ops.append(("recover", rng.randrange(8)))
+        elif p < 0.80:
+            ops.append(("add",))
+        elif p < 0.84:
+            ops.append(("remove", rng.randrange(8)))
+        elif p < 0.95:
+            ops.append(("advance", rng.randrange(1, 25)))
+        else:
+            ops.append(("deliver",))
+    return ops
+
+
+@pytest.mark.durable
+@pytest.mark.parametrize("shards", [1, 4])
+@pytest.mark.parametrize("seed", [2, 11])
+def test_durable_churn_conformance_pinned(seed, shards):
+    """Warm restarts mixed with partitions and membership churn: packed
+    and object backends must stay observationally equal when every node
+    logs durably and some get crash-restarted mid-schedule."""
+    _conformance(seed, _random_durable_ops(seed), ("durable", seed, shards),
+                 shards=shards, wal=True)
+
+
+@pytest.mark.durable
+def test_durable_restart_during_partition_schedule():
+    """Hand-written worst case: a node restarts *while partitioned away*
+    (its recovery delta pass reaches only its own side), then the heal
+    must reconcile both the restart and the partition divergence."""
+    ops = [
+        ("put", 0, 0, False), ("put", 1, 1, False), ("advance", 10),
+        ("partition", 1), ("put", 0, 0, True), ("put", 2, 2, False),
+        ("crash_restart", 1),                # restart inside the partition
+        ("put", 3, 1, False), ("advance", 15),
+        ("heal",), ("crash_restart", 0),     # restart right after heal
+        ("put", 4, 2, True), ("advance", 20),
+        ("fail", 2), ("crash_restart", 2),   # restart a failed-dead node
+        ("advance", 25), ("deliver",),
+    ]
+    _conformance(5, ops, "durable-partition-restart", wal=True)
 
 
 def test_churn_heavy_membership_schedule():
@@ -532,6 +627,35 @@ try:
            st.sampled_from([1, 4]))
     def test_geo_churn_conformance_fuzzed(seed, ops, shards):
         _geo_conformance(seed, ops, (seed, len(ops), shards), shards=shards)
+
+    _durable_op = st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),
+        st.tuples(st.just("put"), st.integers(0, 7), st.integers(0, 7),
+                  st.booleans()),               # twice: writes dominate
+        st.tuples(st.just("get"), st.integers(0, 7), st.integers(0, 7)),
+        st.tuples(st.just("crash_restart"), st.integers(0, 7)),
+        st.tuples(st.just("crash_restart"), st.integers(0, 7)),
+        st.tuples(st.just("partition"), st.integers(1, 5)),
+        st.tuples(st.just("heal")),
+        st.tuples(st.just("fail"), st.integers(0, 7)),
+        st.tuples(st.just("recover"), st.integers(0, 7)),
+        st.tuples(st.just("add")),
+        st.tuples(st.just("remove"), st.integers(0, 7)),
+        st.tuples(st.just("advance"), st.integers(1, 25)),
+        st.tuples(st.just("deliver")),
+    )
+
+    @pytest.mark.slow
+    @pytest.mark.durable
+    @settings(max_examples=100, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.integers(min_value=0, max_value=1 << 20),
+           st.lists(_durable_op, min_size=4, max_size=24),
+           st.sampled_from([1, 4]))
+    def test_durable_churn_conformance_fuzzed(seed, ops, shards):
+        _conformance(seed, ops, ("durable", seed, len(ops), shards),
+                     shards=shards, wal=True)
 
     @pytest.mark.slow
     @settings(max_examples=25, deadline=None,
